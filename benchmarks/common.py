@@ -1,0 +1,42 @@
+"""Shared benchmark utilities: timing, synthetic graphs, CSV emission."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Tuple
+
+import jax
+import numpy as np
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5,
+            **kwargs) -> float:
+    """Median wall time per call in microseconds (block_until_ready)."""
+    for _ in range(warmup):
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def synthetic_graph(num_nodes: int, avg_degree: int, feat: int,
+                    seed: int = 0, num_classes: int = 16
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Random graph (power-law-ish out-degrees) + features + labels."""
+    rng = np.random.default_rng(seed)
+    num_edges = num_nodes * avg_degree
+    # power-law-ish source selection concentrates hubs (real-world-like)
+    src = (num_nodes * rng.power(3, num_edges)).astype(np.int64) % num_nodes
+    dst = rng.integers(0, num_nodes, num_edges)
+    x = rng.standard_normal((num_nodes, feat)).astype(np.float32)
+    y = rng.integers(0, num_classes, num_nodes)
+    return np.stack([src, dst]), x, y
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")

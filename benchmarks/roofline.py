@@ -1,0 +1,61 @@
+"""Roofline reporting: aggregate dry-run JSONs into the §Roofline table.
+
+Usage:
+  python -m benchmarks.roofline [--dir results/dryrun] [--markdown]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+from pathlib import Path
+
+
+def load(dir_: str, mesh: str = "1pod"):
+    recs = []
+    for f in sorted(glob.glob(f"{dir_}/*__{mesh}*.json")):
+        recs.append(json.load(open(f)))
+    return recs
+
+
+def fraction(rec) -> float:
+    """Roofline fraction: useful compute time / achievable step time.
+
+    achievable step = max(compute, memory, collective) assuming perfect
+    overlap of the three engines; useful = MODEL_FLOPS at peak.
+    """
+    t_step = max(rec["t_compute_s"], rec["t_memory_s"],
+                 rec["t_collective_s"])
+    t_useful = rec["model_flops"] / rec["n_chips"] / 197e12
+    return t_useful / t_step if t_step else 0.0
+
+
+def row(rec):
+    if rec["status"] != "ok":
+        return (f"| {rec['arch']} | {rec['shape']} | skipped | "
+                f"{rec.get('reason', '')[:60]}… | | | | | |")
+    return ("| {arch} | {shape} | {dom} | {tc:.4f} | {tm:.4f} | {tl:.4f} | "
+            "{fr:.4f} | {ur:.3f} | {gb:.2f} |").format(
+        arch=rec["arch"], shape=rec["shape"], dom=rec["dominant"],
+        tc=rec["t_compute_s"], tm=rec["t_memory_s"],
+        tl=rec["t_collective_s"], fr=fraction(rec),
+        ur=rec.get("useful_ratio") or 0,
+        gb=(rec.get("bytes_per_device") or 0) / 1e9)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="1pod")
+    args = ap.parse_args()
+    recs = load(args.dir, args.mesh)
+    print("| arch | shape | dominant | t_compute | t_memory | t_collective "
+          "| roofline_frac | useful_ratio | GB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for rec in recs:
+        print(row(rec))
+
+
+if __name__ == "__main__":
+    main()

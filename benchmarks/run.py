@@ -1,0 +1,51 @@
+"""Benchmark aggregator: one function per paper table/claim.
+
+Prints ``name,us_per_call,derived`` CSV rows (see per-module docstrings for
+protocols). Heavy dry-run cells are *not* recompiled here — the roofline
+table reads the cached ``results/dryrun`` JSONs (regenerate via
+``python -m repro.launch.dryrun --all``).
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (explainer_fidelity, grouped_matmul_bench,
+                            sampler_throughput, store_scaling,
+                            table12_compile_trim)
+
+    suites = [
+        ("table12_compile_trim", table12_compile_trim.run),
+        ("sampler_throughput", sampler_throughput.run),
+        ("store_scaling", store_scaling.run),
+        ("grouped_matmul", grouped_matmul_bench.run),
+        ("explainer_fidelity", explainer_fidelity.run),
+    ]
+    failed = []
+    for name, fn in suites:
+        print(f"# ---- {name} ----", flush=True)
+        try:
+            fn()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    print("# ---- roofline (cached dry-run) ----")
+    try:
+        import benchmarks.roofline as roofline
+        for rec in roofline.load("results/dryrun", "1pod"):
+            if rec["status"] == "ok":
+                print(f"roofline/{rec['arch']}/{rec['shape']},"
+                      f"{max(rec['t_compute_s'], rec['t_memory_s'], rec['t_collective_s']) * 1e6:.1f},"
+                      f"dom={rec['dominant']} frac={roofline.fraction(rec):.4f}")
+    except Exception:
+        traceback.print_exc()
+    if failed:
+        print(f"# FAILED: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

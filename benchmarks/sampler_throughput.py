@@ -1,0 +1,86 @@
+"""Sampler throughput (paper §2.3 'Efficient Subgraph Sampling' +
+cuGraph 2-8x loading-speedup claim shape).
+
+Measures: naive per-node Python sampling vs the vectorised budgeted sampler,
+with/without the prefetch thread; homogeneous and temporal variants.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, synthetic_graph
+from repro.data.data import Data
+from repro.data.loader import NeighborLoader
+from repro.data.sampler import NeighborSampler
+
+
+def naive_sample(indptr, indices, seeds, fanouts, rng):
+    """Per-node Python-loop sampler (the paper's 'pure Python' baseline)."""
+    nodes = list(seeds)
+    frontier = list(seeds)
+    for f in fanouts:
+        nxt = []
+        for v in frontier:
+            nbrs = indices[indptr[v]:indptr[v + 1]]
+            if len(nbrs) == 0:
+                continue
+            pick = rng.choice(nbrs, size=min(f, len(nbrs)), replace=False)
+            nxt.extend(int(u) for u in pick)
+        nodes.extend(nxt)
+        frontier = nxt
+    return nodes
+
+
+def run(iters: int = 3):
+    ei, x, y = synthetic_graph(100_000, 16, 64, seed=2)
+    data = Data(x=x, edge_index=ei, y=y)
+    csr = data.get_rev_csr()
+    rng = np.random.default_rng(0)
+    seeds = rng.integers(0, 100_000, 512)
+    fanouts = [10, 10]
+
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        naive_sample(csr.indptr, csr.indices, seeds, fanouts, rng)
+    naive_us = (time.perf_counter() - t0) / iters * 1e6
+
+    sampler = NeighborSampler(data, fanouts)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        sampler.sample(seeds)
+    vec_us = (time.perf_counter() - t0) / iters * 1e6
+    emit("sampler/naive_python_us", naive_us)
+    emit("sampler/vectorized_us", vec_us,
+         f"speedup={naive_us / vec_us:.2f}x")
+
+    # end-to-end loader epoch (sampling + feature fetch), +prefetch overlap
+    for prefetch in (0, 2):
+        loader = NeighborLoader(data, data, num_neighbors=fanouts,
+                                batch_size=512,
+                                input_nodes=np.arange(8192),
+                                prefetch=prefetch)
+        t0 = time.perf_counter()
+        n = 0
+        for b in loader:
+            n += 1
+        dt = (time.perf_counter() - t0) / max(n, 1) * 1e6
+        emit(f"loader/batch_us_prefetch{prefetch}", dt,
+             f"batches={n}")
+
+    # temporal sampling overhead
+    t_edge = rng.integers(0, 1000, ei.shape[1])
+    data_t = Data(x=x, edge_index=ei, y=y, time=t_edge)
+    st = NeighborSampler(data_t, fanouts, temporal_strategy="recent")
+    seed_time = rng.integers(100, 900, 512)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        st.sample(seeds, seed_time)
+    emit("sampler/temporal_recent_us",
+         (time.perf_counter() - t0) / iters * 1e6)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Partitioned feature-store scaling (paper §2.3 cuGraph/WholeGraph claim).
+
+Measures feature-fetch behaviour as partitions scale: remote-row fraction
+under hash vs BFS (locality-aware) partitioning — the quantity that
+determines loading scalability on real clusters — plus fetch latency.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, synthetic_graph
+from repro.data.loader import NeighborLoader
+from repro.data.partition import build_partitioned_stores
+
+
+def run():
+    ei, x, y = synthetic_graph(50_000, 16, 128, seed=3)
+    for method in ("hash", "bfs"):
+        for parts in (2, 4, 8):
+            fs, gs, part = build_partitioned_stores(
+                x, ei, parts, method=method)
+            loader = NeighborLoader(fs, gs, num_neighbors=[10, 10],
+                                    batch_size=256,
+                                    input_nodes=np.where(part == 0)[0][:2048],
+                                    labels_attr=None)
+            fs.stats.update(local_rows=0, remote_rows=0, requests=0)
+            t0 = time.perf_counter()
+            nb = 0
+            for b in loader:
+                nb += 1
+            dt = (time.perf_counter() - t0) / max(nb, 1) * 1e6
+            s = fs.stats
+            frac = s["remote_rows"] / max(s["remote_rows"] + s["local_rows"],
+                                          1)
+            emit(f"store/{method}/parts{parts}_batch_us", dt,
+                 f"remote_frac={frac:.3f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,64 @@
+"""Explainability walkthrough (paper §2.4): train a GCN, explain a node with
+three algorithms, report fidelity metrics and top edges.
+
+Run:  PYTHONPATH=src python examples/explain_gnn.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.edge_index import EdgeIndex
+from repro.core.explain import Explainer
+from repro.nn.gnn.models import make_model
+
+
+def main():
+    rng = np.random.default_rng(3)
+    n, f = 80, 8
+    # two clusters; labels = cluster; inter-cluster edges are the
+    # "irrelevant" structure a good explainer should down-weight
+    comm = (np.arange(n) >= n // 2).astype(np.int64)
+    src, dst = [], []
+    for _ in range(600):
+        a = rng.integers(0, n)
+        b = rng.integers(0, n)
+        if comm[a] == comm[b] or rng.random() < 0.15:
+            src.append(a), dst.append(b)
+    src, dst = np.array(src), np.array(dst)
+    x = rng.standard_normal((n, f)).astype(np.float32)
+    x[comm == 1] += 1.0
+    ei = EdgeIndex.from_coo(src, dst, n, n)
+
+    model = make_model("gcn", f, 32, 2, 2)
+    params = model.init(jax.random.PRNGKey(0))
+    xj, yj = jnp.asarray(x), jnp.asarray(comm)
+
+    @jax.jit
+    def step(p):
+        def loss(p):
+            lp = jax.nn.log_softmax(model.apply(p, xj, ei))
+            return -jnp.take_along_axis(lp, yj[:, None], 1).mean()
+
+        l, g = jax.value_and_grad(loss)(p)
+        return jax.tree_util.tree_map(lambda a, b: a - 0.1 * b, p, g), l
+
+    for i in range(80):
+        params, l = step(params)
+    acc = float((model.apply(params, xj, ei).argmax(-1) == yj).mean())
+    print(f"trained GCN acc={acc * 100:.1f}%")
+
+    node = 5
+    for algo in ("saliency", "integrated_gradients", "gnn_explainer"):
+        expl = Explainer(model, params, algorithm=algo, epochs=100)(
+            xj, ei, node_idx=node)
+        top = expl.top_edges(5)
+        same = np.mean([comm[src[e]] == comm[dst[e]] for e in top])
+        print(f"{algo:22s} fid+={expl.metrics['fidelity_plus']:+.3f} "
+              f"fid-={expl.metrics['fidelity_minus']:+.3f} "
+              f"unfaith={expl.metrics['unfaithfulness']:.3f} "
+              f"top5_intra_cluster={same * 100:.0f}%")
+
+
+if __name__ == "__main__":
+    main()

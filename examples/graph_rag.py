@@ -1,0 +1,73 @@
+"""GraphRAG retrieval workflow (paper §3.2, Figure 4) — toy end-to-end.
+
+A 'knowledge graph' lives in FeatureStore/GraphStore; a query embedding
+retrieves anchor entities (inner-product search), the NeighborLoader pulls
+their contextual subgraph, a GNN encodes it, and pooled node embeddings form
+the context vector that would condition an LLM. The LLM itself is out of
+scope — the retrieval/encode pipeline is the paper's contribution.
+
+Run:  PYTHONPATH=src python examples/graph_rag.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.data import Data
+from repro.data.loader import NeighborLoader
+from repro.nn.gnn.models import make_model
+
+
+def mips(query: np.ndarray, keys: np.ndarray, k: int) -> np.ndarray:
+    """Maximum inner product search (the FAISS role, §3.1/§3.2)."""
+    return np.argsort(-(keys @ query))[:k]
+
+
+def main():
+    rng = np.random.default_rng(1)
+    n, f = 1000, 32
+    # entity embeddings with 10 latent topics
+    topics = rng.integers(0, 10, n)
+    topic_vecs = rng.standard_normal((10, f)).astype(np.float32)
+    x = (topic_vecs[topics]
+         + 0.3 * rng.standard_normal((n, f)).astype(np.float32))
+    # KG edges: mostly intra-topic
+    src = rng.integers(0, n, 8000)
+    sames = rng.random(8000) < 0.8
+    dst = np.where(sames,
+                   rng.permutation(n)[topics[src] * 0 + rng.integers(0, n, 8000)],
+                   rng.integers(0, n, 8000))
+    # bias dst to same topic
+    same_pool = {t: np.where(topics == t)[0] for t in range(10)}
+    dst = np.array([rng.choice(same_pool[topics[s]]) if ss else d
+                    for s, d, ss in zip(src, dst, sames)])
+    kg = Data(x=x, edge_index=np.stack([src, dst]))
+
+    gnn = make_model("sage", f, 64, f, 2)
+    params = gnn.init(jax.random.PRNGKey(0))
+
+    def answer(query_vec: np.ndarray, k_anchors=8):
+        anchors = mips(query_vec, x, k_anchors)           # retrieve
+        loader = NeighborLoader(kg, kg, num_neighbors=[6, 4],
+                                batch_size=k_anchors, input_nodes=anchors,
+                                labels_attr=None)
+        batch = next(iter(loader))                        # subgraph
+        enc = gnn.apply(params, batch.x, batch.edge_index.data,
+                        num_nodes=batch.num_nodes)        # encode
+        valid = np.asarray(batch.n_id) >= 0
+        context = np.asarray(enc)[valid].mean(0)          # pool -> LLM ctx
+        retrieved_topics = topics[np.asarray(batch.n_id)[valid]]
+        return context, retrieved_topics
+
+    # a query about topic 3
+    q = topic_vecs[3] + 0.1 * rng.standard_normal(f).astype(np.float32)
+    ctx, retrieved = answer(q)
+    frac = (retrieved == 3).mean()
+    print(f"context vector dim={ctx.shape[0]}, retrieved nodes={len(retrieved)}")
+    print(f"topic purity of retrieved subgraph: {frac * 100:.0f}% "
+          f"(chance=10%)")
+    assert frac > 0.3
+
+
+if __name__ == "__main__":
+    main()

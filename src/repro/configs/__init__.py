@@ -1,0 +1,38 @@
+"""Assigned-architecture registry: ``get_config(arch_id)`` / ``--arch <id>``.
+
+Each ``<id>.py`` module defines ``CONFIG`` (the exact published config) and
+``SMOKE`` (a reduced same-family config for CPU smoke tests). Shapes live in
+``repro.configs.shapes``.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.nn.lm.config import ModelConfig
+
+ARCH_IDS: List[str] = [
+    "qwen3_14b", "qwen2_7b", "gemma_2b", "qwen3_4b", "arctic_480b",
+    "deepseek_moe_16b", "jamba_1_5_large_398b", "seamless_m4t_large_v2",
+    "internvl2_76b", "falcon_mamba_7b",
+]
+
+# CLI aliases with dashes/dots as given in the assignment
+ALIASES: Dict[str, str] = {
+    "qwen3-14b": "qwen3_14b", "qwen2-7b": "qwen2_7b", "gemma-2b": "gemma_2b",
+    "qwen3-4b": "qwen3_4b", "arctic-480b": "arctic_480b",
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "jamba-1.5-large-398b": "jamba_1_5_large_398b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "internvl2-76b": "internvl2_76b", "falcon-mamba-7b": "falcon_mamba_7b",
+}
+
+
+def canonical(arch: str) -> str:
+    return ALIASES.get(arch, arch)
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(arch)}")
+    return mod.SMOKE if smoke else mod.CONFIG

@@ -1,0 +1,22 @@
+"""Snowflake Arctic-480B [moe]: 35L d_model=7168 56H (GQA kv=8) d_ff=4864
+vocab=32000, MoE 128 experts top-2 + dense residual (dense-MoE hybrid:
+a dense FFN runs in parallel with the routed experts on every layer).
+[hf:Snowflake/snowflake-arctic-base; hf]"""
+
+from repro.nn.lm.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="arctic-480b", family="moe",
+    n_layers=35, d_model=7168, n_heads=56, n_kv_heads=8, head_dim=128,
+    d_ff=4864, vocab_size=32000, act="silu",
+    moe=MoEConfig(num_experts=128, top_k=2, d_expert=4864,
+                  dense_residual=True),
+)
+
+SMOKE = ModelConfig(
+    name="arctic-480b-smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=96, vocab_size=256, act="silu", dtype="float32",
+    moe=MoEConfig(num_experts=8, top_k=2, d_expert=96, dense_residual=True,
+                  capacity_factor=8.0),  # non-dropping at smoke scale
+)

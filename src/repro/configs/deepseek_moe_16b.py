@@ -1,0 +1,21 @@
+"""DeepSeekMoE-16B [moe]: 28L d_model=2048 16H (MHA kv=16) d_ff=1408
+vocab=102400, MoE 64 routed experts top-6 + 2 shared experts, fine-grained;
+layer 0 uses a dense FFN (hidden 10944). [arXiv:2401.06066; hf]"""
+
+from repro.nn.lm.config import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-moe-16b", family="moe",
+    n_layers=28, d_model=2048, n_heads=16, n_kv_heads=16, head_dim=128,
+    d_ff=1408, vocab_size=102400, act="silu", rope_theta=10_000.0,
+    moe=MoEConfig(num_experts=64, top_k=6, d_expert=1408, num_shared=2,
+                  first_dense_ff=10944),
+)
+
+SMOKE = ModelConfig(
+    name="deepseek-moe-16b-smoke", family="moe",
+    n_layers=3, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+    d_ff=64, vocab_size=256, act="silu", dtype="float32",
+    moe=MoEConfig(num_experts=8, top_k=3, d_expert=64, num_shared=2,
+                  first_dense_ff=128, capacity_factor=8.0),
+)

@@ -1,0 +1,20 @@
+"""Falcon-Mamba-7B [ssm]: 64L d_model=4096, attention-free (pure Mamba-1),
+d_ff=0 (the Mamba block IS the layer), vocab=65024, ssm_state=16.
+[arXiv:2410.05355; unverified]"""
+
+from repro.nn.lm.config import MambaConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="falcon-mamba-7b", family="ssm", subquadratic=True,
+    n_layers=64, d_model=4096, n_heads=0, n_kv_heads=0, head_dim=0,
+    d_ff=0, vocab_size=65024, act="silu",
+    attn_every=0,  # attention-free
+    mamba=MambaConfig(d_state=16, d_conv=4, expand=2),
+)
+
+SMOKE = ModelConfig(
+    name="falcon-mamba-smoke", family="ssm", subquadratic=True,
+    n_layers=2, d_model=64, n_heads=0, n_kv_heads=0, head_dim=0,
+    d_ff=0, vocab_size=256, act="silu", dtype="float32",
+    attn_every=0, mamba=MambaConfig(d_state=8, d_conv=4, expand=2),
+)

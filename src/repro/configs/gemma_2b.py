@@ -1,0 +1,19 @@
+"""Gemma-2B [dense]: 18L d_model=2048 8H (GQA kv=1, i.e. MQA) d_ff=16384
+vocab=256000 — GeGLU, head_dim=256, tied embeddings, sqrt(d) embedding
+scaling, (1+w) RMSNorm. [arXiv:2403.08295; hf]"""
+
+from repro.nn.lm.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma-2b", family="dense",
+    n_layers=18, d_model=2048, n_heads=8, n_kv_heads=1, head_dim=256,
+    d_ff=16384, vocab_size=256000, act="gelu", tie_embeddings=True,
+    emb_scale=True, rms_scale_plus_one=True, rope_theta=10_000.0,
+)
+
+SMOKE = ModelConfig(
+    name="gemma-2b-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=1, head_dim=32,
+    d_ff=128, vocab_size=256, act="gelu", tie_embeddings=True,
+    emb_scale=True, rms_scale_plus_one=True, dtype="float32",
+)

@@ -1,0 +1,22 @@
+"""InternVL2-76B [vlm]: 80L d_model=8192 64H (GQA kv=8) d_ff=28672
+vocab=128256 — Llama-3-70B language backbone; InternViT vision frontend
+STUBBED: ``input_specs`` provides precomputed patch embeddings (256 tokens).
+[arXiv:2404.16821; unverified]"""
+
+from repro.nn.lm.config import ModelConfig
+
+N_PATCHES = 256
+
+CONFIG = ModelConfig(
+    name="internvl2-76b", family="vlm",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8, head_dim=128,
+    d_ff=28672, vocab_size=128256, act="silu", rope_theta=500_000.0,
+    n_prefix_embeds=N_PATCHES,
+)
+
+SMOKE = ModelConfig(
+    name="internvl2-smoke", family="vlm",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=128, vocab_size=256, act="silu", dtype="float32",
+    n_prefix_embeds=8,
+)

@@ -1,0 +1,25 @@
+"""Jamba-1.5-Large-398B [hybrid]: 72L d_model=8192 64H (GQA kv=8)
+d_ff=24576 vocab=65536, MoE 16e top-2 — Mamba+attention 1:7 interleave
+(1 attention layer per 8-layer period), MoE every other layer.
+[arXiv:2403.19887; hf]"""
+
+from repro.nn.lm.config import MambaConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="jamba-1.5-large-398b", family="hybrid", subquadratic=True,
+    n_layers=72, d_model=8192, n_heads=64, n_kv_heads=8, head_dim=128,
+    d_ff=24576, vocab_size=65536, act="silu",
+    attn_every=8, attn_offset=4,  # attn at index 4 of each 8-layer period
+    moe=MoEConfig(num_experts=16, top_k=2, d_expert=24576, moe_every=2),
+    mamba=MambaConfig(d_state=16, d_conv=4, expand=2),
+)
+
+SMOKE = ModelConfig(
+    name="jamba-smoke", family="hybrid", subquadratic=True,
+    n_layers=8, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=96, vocab_size=256, act="silu", dtype="float32",
+    attn_every=8, attn_offset=4,
+    moe=MoEConfig(num_experts=4, top_k=2, d_expert=96, moe_every=2,
+                  capacity_factor=4.0),  # non-dropping at smoke scale
+    mamba=MambaConfig(d_state=8, d_conv=4, expand=2),
+)

@@ -1,0 +1,19 @@
+"""Qwen3-4B [dense]: 36L d_model=2560 32H (GQA kv=8) d_ff=9728
+vocab=151936 — qk_norm, GQA; q_dim (32*128=4096) != d_model.
+[hf:Qwen/Qwen3-8B; hf]"""
+
+from repro.nn.lm.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-4b", family="dense",
+    n_layers=36, d_model=2560, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=9728, vocab_size=151936, act="silu", qk_norm=True,
+    rope_theta=1_000_000.0, tie_embeddings=True,
+)
+
+SMOKE = ModelConfig(
+    name="qwen3-4b-smoke", family="dense",
+    n_layers=2, d_model=48, n_heads=4, n_kv_heads=2, head_dim=16,
+    d_ff=96, vocab_size=256, act="silu", qk_norm=True,
+    tie_embeddings=True, dtype="float32",
+)

@@ -1,0 +1,23 @@
+"""SeamlessM4T-large-v2 [audio]: enc-dec, 24L encoder + 24L decoder,
+d_model=1024 16H (MHA kv=16) d_ff=8192 vocab=256206 — multimodal frontend
+STUBBED: ``input_specs`` provides precomputed audio frame embeddings.
+[arXiv:2308.11596; hf]"""
+
+from repro.nn.lm.config import ModelConfig
+
+# vocab padded 256206 -> 256256 (multiple of 256) for tensor-parallel
+# divisibility — standard practice when sharding embedding/vocab dims.
+# The logical vocabulary remains 256206; ids >= 256206 are never emitted.
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2", family="audio",
+    arch_type="encdec", n_enc_layers=24,
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16, head_dim=64,
+    d_ff=8192, vocab_size=256256, act="gelu", rope_theta=10_000.0,
+)
+
+SMOKE = ModelConfig(
+    name="seamless-smoke", family="audio",
+    arch_type="encdec", n_enc_layers=2,
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+    d_ff=128, vocab_size=256, act="gelu", dtype="float32",
+)

@@ -1,0 +1,210 @@
+"""Aggregations as a first-class principle — paper C3 (PyG 2.0 §2.2).
+
+Every aggregation is an object with a uniform signature
+
+    aggr(params, values, index, num_segments, ptr=None) -> (num_segments, F)
+
+so they plug into message passing *and* global readouts interchangeably, and
+can be stacked via :class:`MultiAggregation` — the paper's "seamlessly
+stacked together" (PNA-style). Learnable aggregations (softmax temperature,
+power-mean exponent) carry params; the rest use an empty pytree.
+
+``ptr`` (a CSR-style segment pointer) is accepted by sort-aware aggregations
+(median/quantile) which need contiguous segments — exactly the case the
+paper's sorted ``EdgeIndex`` guarantees.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import Module
+
+
+def _seg_sum(v, idx, n):
+    return jax.ops.segment_sum(v, idx, num_segments=n)
+
+
+def _counts(idx, n, dtype):
+    return jax.ops.segment_sum(jnp.ones(idx.shape[0], dtype), idx,
+                               num_segments=n)
+
+
+class Aggregation(Module):
+    name = "base"
+
+    def apply(self, params, values, index, num_segments, ptr=None):
+        raise NotImplementedError
+
+
+class SumAggregation(Aggregation):
+    name = "sum"
+
+    def apply(self, params, values, index, num_segments, ptr=None):
+        return _seg_sum(values, index, num_segments)
+
+
+class MeanAggregation(Aggregation):
+    name = "mean"
+
+    def apply(self, params, values, index, num_segments, ptr=None):
+        s = _seg_sum(values, index, num_segments)
+        c = _counts(index, num_segments, values.dtype)
+        return s / jnp.maximum(c, 1)[:, None]
+
+
+class MaxAggregation(Aggregation):
+    name = "max"
+
+    def apply(self, params, values, index, num_segments, ptr=None):
+        out = jax.ops.segment_max(values, index, num_segments=num_segments)
+        return jnp.where(jnp.isfinite(out), out, 0.0).astype(values.dtype)
+
+
+class MinAggregation(Aggregation):
+    name = "min"
+
+    def apply(self, params, values, index, num_segments, ptr=None):
+        out = jax.ops.segment_min(values, index, num_segments=num_segments)
+        return jnp.where(jnp.isfinite(out), out, 0.0).astype(values.dtype)
+
+
+class VarAggregation(Aggregation):
+    name = "var"
+
+    def apply(self, params, values, index, num_segments, ptr=None):
+        c = jnp.maximum(_counts(index, num_segments, values.dtype), 1)[:, None]
+        mean = _seg_sum(values, index, num_segments) / c
+        mean2 = _seg_sum(values * values, index, num_segments) / c
+        return jnp.maximum(mean2 - mean * mean, 0.0)
+
+
+class StdAggregation(Aggregation):
+    name = "std"
+
+    def __init__(self, eps: float = 1e-5):
+        self.eps = eps
+        self._var = VarAggregation()
+
+    def apply(self, params, values, index, num_segments, ptr=None):
+        return jnp.sqrt(self._var.apply({}, values, index, num_segments)
+                        + self.eps)
+
+
+class MedianAggregation(Aggregation):
+    """Per-segment median via contiguous-segment sorting (needs ``ptr``).
+
+    The 'advanced' aggregation from the paper. Values must be grouped by
+    segment (sorted EdgeIndex); we sort within segments feature-wise and
+    gather the middle element of each segment.
+    """
+
+    name = "median"
+
+    def apply(self, params, values, index, num_segments, ptr=None):
+        assert ptr is not None, "median aggregation requires a segment ptr"
+        e, f = values.shape
+        # Rank of each slot inside its segment.
+        pos = jnp.arange(e, dtype=jnp.int32) - ptr[index]
+        count = (ptr[1:] - ptr[:-1]).astype(jnp.int32)
+        # Sort each feature column *within* segments: key = (segment, value).
+        # A stable argsort over segment-major composite keys does this.
+        order = jnp.argsort(values, axis=0, stable=True)  # (E, F) per-column
+        seg_of = index[order]  # (E, F) segment of each sorted slot
+        inner = jnp.argsort(seg_of, axis=0, stable=True)  # group by segment
+        sorted_slots = jnp.take_along_axis(order, inner, axis=0)
+        sorted_vals = jnp.take_along_axis(values, sorted_slots, axis=0)
+        # After the two sorts, slots of segment s occupy rows
+        # [ptr[s], ptr[s+1]) per column, ascending in value.
+        med_idx = ptr[:-1][:, None] + jnp.maximum((count[:, None] - 1) // 2, 0)
+        med = jnp.take_along_axis(
+            sorted_vals, med_idx.astype(jnp.int32), axis=0)
+        empty = (count == 0)[:, None]
+        return jnp.where(empty, 0.0, med).astype(values.dtype)
+
+
+class SoftmaxAggregation(Aggregation):
+    """Learnable softmax-weighted aggregation (DeeperGCN): params = temp t."""
+
+    name = "softmax"
+
+    def __init__(self, learn: bool = True, t: float = 1.0):
+        self.learn = learn
+        self.t0 = t
+
+    def init(self, key):
+        return {"t": jnp.asarray(self.t0, jnp.float32)} if self.learn else {}
+
+    def apply(self, params, values, index, num_segments, ptr=None):
+        t = params.get("t", self.t0) if isinstance(params, dict) else self.t0
+        logits = values * t
+        seg_max = jax.ops.segment_max(logits, index, num_segments=num_segments)
+        seg_max = jnp.where(jnp.isfinite(seg_max), seg_max, 0.0)
+        ex = jnp.exp(logits - seg_max[index])
+        den = jnp.maximum(_seg_sum(ex, index, num_segments)[index], 1e-16)
+        return _seg_sum(values * ex / den, index, num_segments)
+
+
+class PowerMeanAggregation(Aggregation):
+    """Learnable power-mean (DeeperGCN): ((1/n) sum x^p)^(1/p)."""
+
+    name = "powermean"
+
+    def __init__(self, learn: bool = True, p: float = 1.0, eps: float = 1e-7):
+        self.learn = learn
+        self.p0 = p
+        self.eps = eps
+
+    def init(self, key):
+        return {"p": jnp.asarray(self.p0, jnp.float32)} if self.learn else {}
+
+    def apply(self, params, values, index, num_segments, ptr=None):
+        p = params.get("p", self.p0) if isinstance(params, dict) else self.p0
+        vp = jnp.power(jnp.clip(values, self.eps, None), p)
+        c = jnp.maximum(_counts(index, num_segments, values.dtype), 1)[:, None]
+        mean = _seg_sum(vp, index, num_segments) / c
+        return jnp.power(jnp.clip(mean, self.eps, None), 1.0 / p)
+
+
+class MultiAggregation(Aggregation):
+    """Stack several aggregations (PNA-style): mode in {'cat', 'sum', 'mean'}."""
+
+    name = "multi"
+
+    def __init__(self, aggrs: Sequence[Aggregation], mode: str = "cat"):
+        self.aggrs = list(aggrs)
+        self.mode = mode
+
+    def init(self, key):
+        keys = jax.random.split(key, len(self.aggrs))
+        return {a.name + f"_{i}": a.init(k)
+                for i, (a, k) in enumerate(zip(self.aggrs, keys))}
+
+    def apply(self, params, values, index, num_segments, ptr=None):
+        outs = [a.apply(params.get(a.name + f"_{i}", {}), values, index,
+                        num_segments, ptr)
+                for i, a in enumerate(self.aggrs)]
+        if self.mode == "cat":
+            return jnp.concatenate(outs, axis=-1)
+        stacked = jnp.stack(outs)
+        return stacked.sum(0) if self.mode == "sum" else stacked.mean(0)
+
+
+_REGISTRY = {
+    "sum": SumAggregation, "add": SumAggregation, "mean": MeanAggregation,
+    "max": MaxAggregation, "min": MinAggregation, "var": VarAggregation,
+    "std": StdAggregation, "median": MedianAggregation,
+    "softmax": SoftmaxAggregation, "powermean": PowerMeanAggregation,
+}
+
+
+def resolve(aggr) -> Aggregation:
+    """'sum' | 'mean' | ... | ['mean','max'] | Aggregation -> Aggregation."""
+    if isinstance(aggr, Aggregation):
+        return aggr
+    if isinstance(aggr, (list, tuple)):
+        return MultiAggregation([resolve(a) for a in aggr])
+    return _REGISTRY[aggr]()

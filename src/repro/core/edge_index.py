@@ -1,0 +1,223 @@
+"""EdgeIndex — the paper's C1 contribution (PyG 2.0 §2.2).
+
+A COO edge tensor of shape ``(2, E)`` that carries *metadata* (sort order,
+undirectedness, node counts) and demand-filled *caches* (CSR / CSC
+conversions, i.e. the adjacency and its transpose). Message passing inspects
+this metadata to pick the optimal compute path:
+
+* sorted-by-row  -> fused CSR segment/SpMM forward path
+* sorted-by-col  -> fused CSC path (transposed flow)
+* cached CSC     -> cheap backward (no re-derivation of ``A^T`` per step)
+* undirected     -> ``A == A^T``; a single cache serves both directions
+
+This mirrors ``torch_geometric.EdgeIndex`` semantics adapted to JAX: the
+object is a registered pytree (arrays are leaves, metadata is static), so it
+can flow through ``jit`` boundaries; caches are jnp arrays computed once and
+reused across layers/steps — exactly the paper's "filled based on demand, and
+maintained and adjusted over its lifespan".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SortOrder = Optional[str]  # None | "row" | "col"
+
+
+def _count_sorted(index: jnp.ndarray, n: int) -> jnp.ndarray:
+    """ptr[i] = number of entries < i, for a sorted index vector (CSR rowptr)."""
+    # searchsorted over the sorted index gives the compressed pointer directly.
+    return jnp.searchsorted(index, jnp.arange(n + 1), side="left").astype(jnp.int32)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class EdgeIndex:
+    """COO edge index with metadata + CSR/CSC caches.
+
+    Attributes:
+      data:          int32 array of shape (2, E): row 0 = source, row 1 = dest.
+      num_src_nodes: number of source nodes (rows of A).
+      num_dst_nodes: number of destination nodes (cols of A).
+      sort_order:    None | "row" | "col" — which coordinate `data` is sorted by.
+      is_undirected: if True, A == A^T and one cache serves both directions.
+      _csr / _csc:   optional cached (indptr, indices, perm) triples.
+    """
+
+    data: jnp.ndarray
+    num_src_nodes: int
+    num_dst_nodes: int
+    sort_order: SortOrder = None
+    is_undirected: bool = False
+    _csr: Optional[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]] = None
+    _csc: Optional[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]] = None
+
+    # ------------------------------------------------------------------ pytree
+    def tree_flatten(self):
+        children = (self.data, self._csr, self._csc)
+        aux = (self.num_src_nodes, self.num_dst_nodes, self.sort_order,
+               self.is_undirected)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        data, csr, csc = children
+        ns, nd, so, undirected = aux
+        return cls(data, ns, nd, so, undirected, csr, csc)
+
+    # ------------------------------------------------------------- constructors
+    @classmethod
+    def from_coo(cls, src, dst, num_src_nodes=None, num_dst_nodes=None,
+                 sort_order: SortOrder = None, is_undirected: bool = False):
+        src = jnp.asarray(src, jnp.int32)
+        dst = jnp.asarray(dst, jnp.int32)
+        if num_src_nodes is None:
+            num_src_nodes = int(src.max()) + 1 if src.size else 0
+        if num_dst_nodes is None:
+            num_dst_nodes = int(dst.max()) + 1 if dst.size else 0
+        return cls(jnp.stack([src, dst]), int(num_src_nodes), int(num_dst_nodes),
+                   sort_order, is_undirected)
+
+    # ----------------------------------------------------------------- accessors
+    @property
+    def src(self) -> jnp.ndarray:
+        return self.data[0]
+
+    @property
+    def dst(self) -> jnp.ndarray:
+        return self.data[1]
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.data.shape[1])
+
+    def sparse_size(self) -> Tuple[int, int]:
+        return (self.num_src_nodes, self.num_dst_nodes)
+
+    # ------------------------------------------------------------------- sorting
+    def sort_by(self, order: str) -> Tuple["EdgeIndex", jnp.ndarray]:
+        """Return a copy sorted by 'row' (src) or 'col' (dst) + the permutation."""
+        assert order in ("row", "col")
+        if self.sort_order == order:
+            return self, jnp.arange(self.num_edges, dtype=jnp.int32)
+        key = self.src if order == "row" else self.dst
+        # Stable sort keeps deterministic tie order (matches numpy/PyG).
+        perm = jnp.argsort(key, stable=True).astype(jnp.int32)
+        out = EdgeIndex(self.data[:, perm], self.num_src_nodes,
+                        self.num_dst_nodes, order, self.is_undirected)
+        return out, perm
+
+    # -------------------------------------------------------------------- caches
+    @staticmethod
+    def _memoizable(triple) -> bool:
+        """Never memoise tracers: a cache filled inside a jit trace would
+        leak the tracer into later traces (the mutable-cache + jit hazard).
+        Inside jit the conversion is recomputed — XLA CSE's it anyway."""
+        return not any(isinstance(a, jax.core.Tracer) for a in triple)
+
+    def get_csr(self) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """(rowptr, col, perm): perm maps CSR edge slots -> original COO slots.
+
+        Fills and memoises the cache on first call (the paper's demand-filled
+        cache). For undirected graphs a CSC cache doubles as CSR.
+        """
+        if self._csr is not None:
+            return self._csr
+        if self.is_undirected and self._csc is not None:
+            colptr, row, perm = self._csc
+            self._csr = (colptr, row, perm)
+            return self._csr
+        if self.sort_order == "row":
+            rowptr = _count_sorted(self.src, self.num_src_nodes)
+            perm = jnp.arange(self.num_edges, dtype=jnp.int32)
+            out = (rowptr, self.dst, perm)
+        else:
+            sorted_ei, perm = self.sort_by("row")
+            rowptr = _count_sorted(sorted_ei.src, self.num_src_nodes)
+            out = (rowptr, sorted_ei.dst, perm)
+        if self._memoizable(out):
+            self._csr = out
+        return out
+
+    def get_csc(self) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """(colptr, row, perm): the transposed adjacency — the backward cache."""
+        if self._csc is not None:
+            return self._csc
+        if self.is_undirected and self._csr is not None:
+            rowptr, col, perm = self._csr
+            self._csc = (rowptr, col, perm)
+            return self._csc
+        if self.sort_order == "col":
+            colptr = _count_sorted(self.dst, self.num_dst_nodes)
+            perm = jnp.arange(self.num_edges, dtype=jnp.int32)
+            out = (colptr, self.src, perm)
+        else:
+            sorted_ei, perm = self.sort_by("col")
+            colptr = _count_sorted(sorted_ei.dst, self.num_dst_nodes)
+            out = (colptr, sorted_ei.src, perm)
+        if self._memoizable(out):
+            self._csc = out
+        return out
+
+    def fill_cache(self) -> "EdgeIndex":
+        """Eagerly fill both caches (used before entering a jit'd loop)."""
+        self.get_csr()
+        if not self.is_undirected:
+            self.get_csc()
+        return self
+
+    # --------------------------------------------------------------------- spmm
+    def matmul(self, x: jnp.ndarray, edge_weight: Optional[jnp.ndarray] = None,
+               transpose: bool = False, reduce: str = "sum") -> jnp.ndarray:
+        """Sparse(A or A^T) @ dense(x) using the best available path.
+
+        ``A[dst, src] = w`` convention: forward message passing aggregates
+        source features into destinations, i.e. ``out = A @ x`` with A of
+        shape (num_dst, num_src).
+        """
+        from repro.kernels.spmm import ops as spmm_ops  # local import: no cycle
+        if not transpose:
+            colptr, row, perm = self.get_csc()
+            w = None if edge_weight is None else edge_weight[perm]
+            return spmm_ops.spmm_csr(colptr, row, x, w,
+                                     num_rows=self.num_dst_nodes, reduce=reduce)
+        rowptr, col, perm = self.get_csr()
+        w = None if edge_weight is None else edge_weight[perm]
+        return spmm_ops.spmm_csr(rowptr, col, x, w,
+                                 num_rows=self.num_src_nodes, reduce=reduce)
+
+    # ------------------------------------------------------------------ utility
+    def to_undirected(self) -> "EdgeIndex":
+        src = jnp.concatenate([self.src, self.dst])
+        dst = jnp.concatenate([self.dst, self.src])
+        n = max(self.num_src_nodes, self.num_dst_nodes)
+        return EdgeIndex(jnp.stack([src, dst]), n, n, None, True)
+
+    def validate(self) -> "EdgeIndex":
+        """Host-side sanity check (not for use inside jit)."""
+        d = np.asarray(self.data)
+        if d.size:
+            assert d.min() >= 0, "negative node index"
+            assert d[0].max() < self.num_src_nodes, "src index out of range"
+            assert d[1].max() < self.num_dst_nodes, "dst index out of range"
+        if self.sort_order == "row":
+            assert bool(np.all(np.diff(d[0]) >= 0)), "not sorted by row"
+        if self.sort_order == "col":
+            assert bool(np.all(np.diff(d[1]) >= 0)), "not sorted by col"
+        return self
+
+
+def coalesce(edge_index: EdgeIndex) -> EdgeIndex:
+    """Remove duplicate edges (host-side helper, mirrors PyG coalesce)."""
+    d = np.asarray(edge_index.data)
+    key = d[0].astype(np.int64) * edge_index.num_dst_nodes + d[1]
+    _, idx = np.unique(key, return_index=True)
+    idx.sort()
+    return EdgeIndex(jnp.asarray(d[:, idx]), edge_index.num_src_nodes,
+                     edge_index.num_dst_nodes, None, edge_index.is_undirected)

@@ -1,0 +1,54 @@
+"""Layer-wise trimming of BFS-ordered subgraphs — paper C8 (§2.3, Table 2).
+
+A GNN on a k-hop sampled subgraph only needs hop-``h`` nodes during the first
+``k - h`` layers: nodes sampled in later hops stop contributing to the seed
+representations. PyG trims by slicing adjacency/features along the BFS
+ordering on the fly ("zero-copy"). Here the sampler emits *budgeted, padded*
+hops (static per-hop sizes), so trimming is a **static** ``lax.slice`` — free
+at trace time, fused by XLA, and crucially shape-stable so the jit cache
+never misses. This is the TPU/XLA rendition of the paper's zero-copy narrow.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.edge_index import EdgeIndex
+
+
+def trim_sizes(num_nodes_per_hop: Sequence[int],
+               num_edges_per_hop: Sequence[int],
+               layer: int) -> Tuple[int, int]:
+    """(nodes, edges) still needed when entering GNN layer ``layer`` (0-based).
+
+    With L = len(hops) - 1 total layers, at layer l we keep hops 0..L-l of
+    nodes and hops 1..L-l of edges (edge hop h connects hop h-1/h nodes).
+    """
+    depth = len(num_edges_per_hop)
+    keep_hops = depth - layer
+    n_nodes = int(sum(num_nodes_per_hop[:keep_hops + 1]))
+    n_edges = int(sum(num_edges_per_hop[:keep_hops]))
+    return n_nodes, n_edges
+
+
+def trim_to_layer(layer: int, num_nodes_per_hop: Sequence[int],
+                  num_edges_per_hop: Sequence[int], x: jnp.ndarray,
+                  edge_index, edge_attr: Optional[jnp.ndarray] = None):
+    """Slice (x, edge_index[, edge_attr]) to what layer ``layer`` needs.
+
+    Requires BFS ordering: node slots grouped by hop (seeds first), edge
+    slots grouped by the hop that discovered them — exactly what
+    ``repro.data.sampler`` produces. All sizes static -> jit-stable.
+    """
+    n_nodes, n_edges = trim_sizes(num_nodes_per_hop, num_edges_per_hop, layer)
+    x_t = x[:n_nodes]
+    if isinstance(edge_index, EdgeIndex):
+        ei_t = EdgeIndex(edge_index.data[:, :n_edges], n_nodes, n_nodes,
+                         edge_index.sort_order, edge_index.is_undirected)
+    else:
+        ei_t = edge_index[:, :n_edges]
+    if edge_attr is not None:
+        return x_t, ei_t, edge_attr[:n_edges]
+    return x_t, ei_t, None

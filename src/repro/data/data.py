@@ -1,0 +1,130 @@
+"""Data / HeteroData containers implementing BOTH store interfaces.
+
+Mirrors the paper's key unification: "both Data and HeteroData classes in
+PyG inherit from the FeatureStore and GraphStore interfaces, providing a
+unified mechanism for retrieving mini-batches from any type of data storage".
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.data.feature_store import FeatureStore, InMemoryFeatureStore, Key
+from repro.data.graph_store import (CSRGraph, DEFAULT_ETYPE, EdgeType,
+                                    GraphStore, InMemoryGraphStore)
+
+
+class Data(FeatureStore, GraphStore):
+    """Homogeneous in-memory graph = feature store + graph store in one."""
+
+    def __init__(self, x: Optional[np.ndarray] = None,
+                 edge_index: Optional[np.ndarray] = None,
+                 y: Optional[np.ndarray] = None,
+                 num_nodes: Optional[int] = None,
+                 time: Optional[np.ndarray] = None,
+                 edge_attr: Optional[np.ndarray] = None):
+        self._fs = InMemoryFeatureStore()
+        self._gs = InMemoryGraphStore()
+        if x is not None:
+            self.put_tensor(x, group="node", attr="x")
+            num_nodes = num_nodes or len(x)
+        if y is not None:
+            self.put_tensor(y, group="node", attr="y")
+        if edge_attr is not None:
+            self.put_tensor(edge_attr, group="edge", attr="edge_attr")
+        if edge_index is not None:
+            self.put_edge_index(edge_index, num_nodes=num_nodes, time=time)
+        self.num_nodes = num_nodes or 0
+
+    # FeatureStore plumbing
+    def _put(self, key, value):
+        if isinstance(key, tuple) and len(key) == 2 and isinstance(
+                key[0], str):
+            return self._fs._put(key, value)
+        return self._gs._put(key, value)
+
+    def _get(self, key, index=None):
+        if isinstance(key, tuple) and len(key) == 2 and isinstance(
+                key[0], str):
+            return self._fs._get(key, index)
+        return self._gs._get(key)
+
+    def _size(self, key):
+        return self._fs._size(key)
+
+    # GraphStore plumbing
+    def _cache(self, etype, key):
+        return self._gs._cache(etype, key)
+
+    def _set_cache(self, etype, key, csr):
+        return self._gs._set_cache(etype, key, csr)
+
+    def edge_types(self):
+        return self._gs.edge_types()
+
+    @property
+    def x(self):
+        return self.get_tensor(group="node", attr="x")
+
+    @property
+    def y(self):
+        return self.get_tensor(group="node", attr="y")
+
+
+class HeteroData(FeatureStore, GraphStore):
+    """Typed graph (V, E, phi, psi): per-type features + per-type edges."""
+
+    def __init__(self):
+        self._fs = InMemoryFeatureStore()
+        self._gs = InMemoryGraphStore()
+        self.num_nodes_dict: Dict[str, int] = {}
+
+    def add_nodes(self, node_type: str, x: np.ndarray,
+                  time: Optional[np.ndarray] = None, **extra):
+        self.put_tensor(x, group=node_type, attr="x")
+        if time is not None:
+            self.put_tensor(time, group=node_type, attr="time")
+        for k, v in extra.items():
+            self.put_tensor(v, group=node_type, attr=k)
+        self.num_nodes_dict[node_type] = len(x)
+        return self
+
+    def add_edges(self, edge_type: EdgeType, edge_index,
+                  time: Optional[np.ndarray] = None):
+        n = max(self.num_nodes_dict.get(edge_type[0], 0),
+                self.num_nodes_dict.get(edge_type[2], 0),
+                int(np.asarray(edge_index).max()) + 1 if np.asarray(
+                    edge_index).size else 0)
+        self.put_edge_index(edge_index, edge_type=edge_type, num_nodes=n,
+                            time=time)
+        return self
+
+    def _put(self, key, value):
+        if isinstance(key, tuple) and len(key) == 2:
+            return self._fs._put(key, value)
+        return self._gs._put(key, value)
+
+    def _get(self, key, index=None):
+        if isinstance(key, tuple) and len(key) == 2:
+            return self._fs._get(key, index)
+        return self._gs._get(key)
+
+    def _size(self, key):
+        return self._fs._size(key)
+
+    def _cache(self, etype, key):
+        return self._gs._cache(etype, key)
+
+    def _set_cache(self, etype, key, csr):
+        return self._gs._set_cache(etype, key, csr)
+
+    def edge_types(self):
+        return self._gs.edge_types()
+
+    def node_types(self):
+        return list(self.num_nodes_dict)
+
+    def metadata(self) -> Tuple[list, list]:
+        return (self.node_types(), self.edge_types())

@@ -1,0 +1,148 @@
+"""FeatureStore — the paper's remote-backend interface (C6, §2.3).
+
+"Users that define custom feature handling are only required to specify the
+implementation of the get operation on their feature backend" — the abstract
+interface below is exactly that: ``_get`` / ``_put`` on (group, attr) keyed
+tensors, with the loader oblivious to where features live.
+
+Implementations here:
+  * InMemoryFeatureStore — plain dict-of-arrays.
+  * PartitionedFeatureStore — features sharded into partitions with a
+    routing table; ``get`` fans indices out per partition and re-assembles
+    (the JAX-land stand-in for WholeGraph/remote KV stores). Fetch counters
+    expose the remote-traffic behaviour that the paper's distributed
+    benchmarks measure.
+"""
+
+from __future__ import annotations
+
+import abc
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+Key = Tuple[str, str]  # (group e.g. node type, attr e.g. 'x')
+
+
+class FeatureStore(abc.ABC):
+    @abc.abstractmethod
+    def _put(self, key: Key, tensor: np.ndarray) -> None: ...
+
+    @abc.abstractmethod
+    def _get(self, key: Key, index: Optional[np.ndarray]) -> np.ndarray: ...
+
+    @abc.abstractmethod
+    def _size(self, key: Key) -> Tuple[int, ...]: ...
+
+    # ---- public API (PyG-style) ----
+    def put_tensor(self, tensor, *, group: str = "node", attr: str = "x"):
+        self._put((group, attr), np.asarray(tensor))
+        return self
+
+    def get_tensor(self, *, group: str = "node", attr: str = "x",
+                   index: Optional[np.ndarray] = None) -> np.ndarray:
+        return self._get((group, attr), index)
+
+    def get_tensor_size(self, *, group: str = "node", attr: str = "x"):
+        return self._size((group, attr))
+
+    def get_padded(self, index: np.ndarray, *, group: str = "node",
+                   attr: str = "x", fill: float = 0.0) -> np.ndarray:
+        """Gather with -1 = padding -> zero rows (the loader's fetch op).
+
+        Only valid rows are fetched from the backend (pads never generate
+        storage traffic — keeps remote-fetch accounting honest).
+        """
+        index = np.asarray(index)
+        valid = index >= 0
+        probe = self.get_tensor(group=group, attr=attr,
+                                index=index[valid][:1]) if valid.any() else \
+            self.get_tensor(group=group, attr=attr, index=np.zeros(1, int))
+        out = np.full((len(index),) + probe.shape[1:], fill,
+                      dtype=probe.dtype)
+        if valid.any():
+            out[valid] = self.get_tensor(group=group, attr=attr,
+                                         index=index[valid])
+        return out
+
+
+class InMemoryFeatureStore(FeatureStore):
+    def __init__(self):
+        self._data: Dict[Key, np.ndarray] = {}
+
+    def _put(self, key, tensor):
+        self._data[key] = tensor
+
+    def _get(self, key, index):
+        t = self._data[key]
+        return t if index is None else t[np.asarray(index)]
+
+    def _size(self, key):
+        return tuple(self._data[key].shape)
+
+    def keys(self):
+        return list(self._data)
+
+
+class PartitionedFeatureStore(FeatureStore):
+    """Row-partitioned store with a routing table (distributed stand-in).
+
+    ``get`` groups requested rows by home partition, "fetches" from each
+    (counted as remote traffic for partitions != local_rank), and
+    scatter-assembles — the access pattern of a real sharded KV/embedding
+    service, with the training loop fully oblivious (paper C6/C10).
+    """
+
+    def __init__(self, num_parts: int, local_rank: int = 0):
+        self.num_parts = num_parts
+        self.local_rank = local_rank
+        self._parts: Dict[Key, List[np.ndarray]] = {}
+        self._route: Dict[Key, np.ndarray] = {}     # global row -> partition
+        self._local_idx: Dict[Key, np.ndarray] = {}  # global row -> row-in-part
+        self.stats = {"local_rows": 0, "remote_rows": 0, "requests": 0}
+        self._lock = threading.Lock()
+
+    def _put(self, key, tensor):
+        n = tensor.shape[0]
+        route = np.arange(n) % self.num_parts  # block-cyclic by default
+        self.put_partitioned(key, tensor, route)
+
+    def put_partitioned(self, key: Key, tensor: np.ndarray,
+                        route: np.ndarray):
+        parts, local_idx = [], np.zeros(len(route), np.int64)
+        for p in range(self.num_parts):
+            rows = np.where(route == p)[0]
+            local_idx[rows] = np.arange(len(rows))
+            parts.append(tensor[rows])
+        self._parts[key] = parts
+        self._route[key] = np.asarray(route)
+        self._local_idx[key] = local_idx
+
+    def _get(self, key, index):
+        route = self._route[key]
+        if index is None:
+            index = np.arange(len(route))
+        index = np.asarray(index)
+        local = self._local_idx[key][index]
+        part = route[index]
+        feat_dim = self._parts[key][0].shape[1:]
+        out = np.zeros((len(index),) + feat_dim,
+                       dtype=self._parts[key][0].dtype)
+        with self._lock:
+            self.stats["requests"] += 1
+            for p in range(self.num_parts):
+                m = part == p
+                cnt = int(m.sum())
+                if not cnt:
+                    continue
+                out[m] = self._parts[key][p][local[m]]
+                if p == self.local_rank:
+                    self.stats["local_rows"] += cnt
+                else:
+                    self.stats["remote_rows"] += cnt
+        return out
+
+    def _size(self, key):
+        n = len(self._route[key])
+        return (n,) + tuple(self._parts[key][0].shape[1:])

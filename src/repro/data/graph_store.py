@@ -1,0 +1,125 @@
+"""GraphStore — the paper's graph-backend interface (C6, §2.3).
+
+Stores edge indices per (src_type, rel_type, dst_type) in COO/CSR/CSC
+layouts with demand-filled conversions (the storage-level counterpart of the
+EdgeIndex caches). Samplers consume CSR (+ per-row time sorting for temporal
+sampling); users with custom graph backends "specify how sampling is
+performed against their graph representation" by implementing ``_get``.
+"""
+
+from __future__ import annotations
+
+import abc
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+EdgeType = Tuple[str, str, str]
+DEFAULT_ETYPE: EdgeType = ("node", "to", "node")
+
+
+class CSRGraph:
+    """Host-side CSR adjacency (+ optional per-edge time, sorted per row)."""
+
+    def __init__(self, indptr: np.ndarray, indices: np.ndarray,
+                 edge_id: np.ndarray, time: Optional[np.ndarray] = None):
+        self.indptr = indptr
+        self.indices = indices
+        self.edge_id = edge_id
+        self.time = time
+
+    @property
+    def num_rows(self) -> int:
+        return len(self.indptr) - 1
+
+    @property
+    def num_edges(self) -> int:
+        return len(self.indices)
+
+    @classmethod
+    def from_coo(cls, src: np.ndarray, dst: np.ndarray, num_nodes: int,
+                 time: Optional[np.ndarray] = None) -> "CSRGraph":
+        """CSR over *source* rows: row v lists v's outgoing neighbors.
+
+        For temporal graphs, each row's neighbors are sub-sorted by edge
+        time so a binary search bounds the ``<= t`` prefix (paper C9).
+        """
+        order = np.lexsort((time, src)) if time is not None else np.argsort(
+            src, kind="stable")
+        src_s, dst_s = src[order], dst[order]
+        indptr = np.searchsorted(src_s, np.arange(num_nodes + 1)).astype(
+            np.int64)
+        t = time[order] if time is not None else None
+        return cls(indptr, dst_s.astype(np.int64), order.astype(np.int64), t)
+
+
+class GraphStore(abc.ABC):
+    """Demand-filled CSR/CSC caches at the storage layer (paper C1 at rest).
+
+    ``get_csr``   — rows = source nodes (outgoing adjacency)
+    ``get_rev_csr`` — rows = destination nodes (incoming adjacency; what a
+    source_to_target neighbor sampler walks backwards over).
+    """
+
+    @abc.abstractmethod
+    def _put(self, etype: EdgeType, coo: tuple) -> None: ...
+
+    @abc.abstractmethod
+    def _get(self, etype: EdgeType) -> tuple: ...
+
+    @abc.abstractmethod
+    def _cache(self, etype: EdgeType, key: str) -> Optional[CSRGraph]: ...
+
+    @abc.abstractmethod
+    def _set_cache(self, etype: EdgeType, key: str, csr: CSRGraph): ...
+
+    def put_edge_index(self, edge_index, *, edge_type: EdgeType = DEFAULT_ETYPE,
+                       num_nodes: Optional[int] = None,
+                       time: Optional[np.ndarray] = None):
+        src, dst = np.asarray(edge_index[0]), np.asarray(edge_index[1])
+        n = num_nodes or (int(max(src.max(), dst.max())) + 1 if len(src) else 0)
+        self._put(edge_type,
+                  (src, dst, None if time is None else np.asarray(time), n))
+        return self
+
+    def get_csr(self, edge_type: EdgeType = DEFAULT_ETYPE) -> CSRGraph:
+        hit = self._cache(edge_type, "csr")
+        if hit is None:
+            src, dst, time, n = self._get(edge_type)
+            hit = CSRGraph.from_coo(src, dst, n, time)
+            self._set_cache(edge_type, "csr", hit)
+        return hit
+
+    def get_rev_csr(self, edge_type: EdgeType = DEFAULT_ETYPE) -> CSRGraph:
+        hit = self._cache(edge_type, "rev_csr")
+        if hit is None:
+            src, dst, time, n = self._get(edge_type)
+            hit = CSRGraph.from_coo(dst, src, n, time)
+            self._set_cache(edge_type, "rev_csr", hit)
+        return hit
+
+    def edge_types(self):
+        raise NotImplementedError
+
+
+class InMemoryGraphStore(GraphStore):
+    def __init__(self):
+        self._coo: Dict[EdgeType, tuple] = {}
+        self._caches: Dict[Tuple[EdgeType, str], CSRGraph] = {}
+
+    def _put(self, etype, coo):
+        self._coo[etype] = coo
+        self._caches = {k: v for k, v in self._caches.items()
+                        if k[0] != etype}
+
+    def _get(self, etype):
+        return self._coo[etype]
+
+    def _cache(self, etype, key):
+        return self._caches.get((etype, key))
+
+    def _set_cache(self, etype, key, csr):
+        self._caches[(etype, key)] = csr
+
+    def edge_types(self):
+        return list(self._coo)

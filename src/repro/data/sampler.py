@@ -1,0 +1,255 @@
+"""Budgeted multi-hop neighbor sampling — paper C7 + C9 (§2.3).
+
+PyG's sampler is multi-threaded C++; the TPU adaptation (DESIGN.md §2) is a
+*vectorised* NumPy sampler that emits **static padded shapes**: every hop has
+a fixed node/edge budget, so the jit'd training step never recompiles and
+layer-wise trimming (C8) becomes static slicing. Matches PyG semantics:
+
+  * single multi-hop subgraph (not layer-wise 1-hop graphs),
+  * intersecting (deduplicated) or disjoint per-seed subgraphs,
+  * directional sampling over the CSR rows,
+  * temporal constraints: only edges with ``time <= seed_time`` are
+    sampled, with 'uniform' / 'recent' / 'anneal' strategies (C9).
+
+Output layout (local slot space):
+  slot 0              = null sink (zero features; padded edges self-loop here)
+  slots 1..B          = seeds
+  then one block per hop, each padded to its budget with -1 global ids.
+Edges are grouped by the hop that discovered them (BFS order), padded with
+(0, 0) — i.e. null->null. ``num_sampled_nodes/edges`` feed ``trim_to_layer``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.data.graph_store import CSRGraph, DEFAULT_ETYPE, GraphStore
+
+
+@dataclasses.dataclass
+class SamplerOutput:
+    node: np.ndarray                 # (N_slots,) global node ids, -1 = pad
+    row: np.ndarray                  # (E_slots,) local src slots
+    col: np.ndarray                  # (E_slots,) local dst slots
+    edge: np.ndarray                 # (E_slots,) global edge ids, -1 = pad
+    num_sampled_nodes: List[int]     # per hop (incl. [null+seeds] first)
+    num_sampled_edges: List[int]     # per hop
+    seed_slots: np.ndarray           # (B,) local slots of the seeds
+    metadata: dict = dataclasses.field(default_factory=dict)
+
+
+def _pick_neighbors(csr: CSRGraph, frontier: np.ndarray, fanout: int,
+                    rng: np.random.Generator,
+                    seed_time: Optional[np.ndarray] = None,
+                    strategy: str = "uniform"):
+    """Vectorised neighbor choice (with replacement) for a frontier.
+
+    Returns (src_global, eid_global, parent_idx) arrays of len F*fanout with
+    -1 where the parent has no (valid) neighbors. ``seed_time`` is the
+    per-frontier-node time bound for temporal sampling.
+    """
+    f = len(frontier)
+    valid_parent = frontier >= 0
+    safe = np.where(valid_parent, frontier, 0)
+    lo = csr.indptr[safe]
+    hi = csr.indptr[safe + 1]
+    if seed_time is not None and csr.time is not None:
+        # rows are time-sorted: binary search the <= t prefix per parent
+        hi = np.array([
+            lo[i] + np.searchsorted(csr.time[lo[i]:hi[i]], seed_time[i],
+                                    side="right")
+            for i in range(f)], dtype=np.int64)
+    deg = np.maximum(hi - lo, 0)
+    u = rng.random((f, fanout))
+    if strategy == "recent" and seed_time is not None:
+        # most-recent k: take the last `fanout` of the allowed prefix
+        pick = (deg[:, None] - 1 - np.arange(fanout)[None, :])
+    elif strategy == "anneal" and seed_time is not None:
+        # bias toward recent: sample rank ~ (1 - u^2) * deg (denser near end)
+        pick = np.floor((1.0 - u * u) * deg[:, None]).astype(np.int64)
+        pick = np.minimum(pick, deg[:, None] - 1)
+    else:
+        pick = np.floor(u * deg[:, None]).astype(np.int64)
+    ok = (pick >= 0) & (deg[:, None] > 0) & valid_parent[:, None]
+    pick = np.clip(pick, 0, None)
+    eidx = lo[:, None] + np.minimum(pick, np.maximum(deg[:, None] - 1, 0))
+    eidx = np.clip(eidx, 0, max(len(csr.indices) - 1, 0))  # empty tail rows
+    src = np.where(ok, csr.indices[eidx], -1)
+    eid = np.where(ok, csr.edge_id[eidx], -1)
+    parent = np.broadcast_to(np.arange(f)[:, None], (f, fanout))
+    return src.ravel(), eid.ravel(), parent.ravel()
+
+
+class NeighborSampler:
+    """k-hop budgeted sampler over a GraphStore (homogeneous)."""
+
+    def __init__(self, graph_store: GraphStore,
+                 num_neighbors: Sequence[int], *,
+                 edge_type=DEFAULT_ETYPE, disjoint: bool = False,
+                 temporal_strategy: str = "uniform", seed: int = 0):
+        # source_to_target flow: walk the *incoming* adjacency backwards
+        self.csr = graph_store.get_rev_csr(edge_type)
+        self.num_neighbors = list(num_neighbors)
+        self.disjoint = disjoint
+        self.temporal_strategy = temporal_strategy
+        self.rng = np.random.default_rng(seed)
+
+    def sample(self, seeds: np.ndarray,
+               seed_time: Optional[np.ndarray] = None) -> SamplerOutput:
+        seeds = np.asarray(seeds, np.int64)
+        if self.disjoint:
+            return self._sample_disjoint(seeds, seed_time)
+        return self._sample_shared(seeds, seed_time)
+
+    # -- intersecting subgraphs: global dedup across the batch ---------------
+    def _sample_shared(self, seeds, seed_time):
+        """Fully vectorised hop expansion (no per-edge Python).
+
+        Dedup uses a persistent global->slot lookup array (reset via the
+        touched list after each call) — the vectorised replacement for the
+        paper's C++ hash map.
+        """
+        b = len(seeds)
+        n_glob = self.csr.num_rows
+        if not hasattr(self, "_slot_of") or len(self._slot_of) != n_glob:
+            self._slot_of = np.full(n_glob, -1, np.int64)
+        slot_of = self._slot_of
+        touched = [seeds]
+        slot_of[seeds] = np.arange(1, b + 1)
+        nodes = [np.array([-1], np.int64), seeds]  # null sink + seeds
+        num_nodes = [1 + b]
+        rows, cols, eids, num_edges = [], [], [], []
+        frontier = seeds
+        frontier_slots = np.arange(1, b + 1)
+        frontier_time = seed_time
+        for fanout in self.num_neighbors:
+            budget = len(frontier) * fanout
+            src, eid, parent = _pick_neighbors(
+                self.csr, frontier, fanout, self.rng,
+                seed_time=frontier_time, strategy=self.temporal_strategy)
+            valid = src >= 0
+            vsrc = src[valid]
+            base = sum(num_nodes)
+            # vectorised dedup: first occurrence of each unseen global id,
+            # slotted in BFS discovery order
+            unseen = slot_of[vsrc] < 0
+            uniq, first = np.unique(vsrc[unseen], return_index=True)
+            disc = uniq[np.argsort(first, kind="stable")]
+            slot_of[disc] = base + np.arange(len(disc))
+            touched.append(disc)
+            hop_nodes = np.full(budget, -1, np.int64)
+            hop_nodes[:len(disc)] = disc
+            # edge assembly: valid edges compacted to the front
+            w = int(valid.sum())
+            row = np.zeros(budget, np.int64)
+            col = np.zeros(budget, np.int64)
+            evalid = np.full(budget, -1, np.int64)
+            row[:w] = slot_of[vsrc]
+            col[:w] = frontier_slots[parent[valid]]
+            evalid[:w] = eid[valid]
+            nodes.append(hop_nodes)
+            num_nodes.append(budget)
+            rows.append(row)
+            cols.append(col)
+            eids.append(evalid)
+            num_edges.append(budget)
+            frontier = hop_nodes
+            frontier_slots = np.where(hop_nodes >= 0, slot_of[
+                np.maximum(hop_nodes, 0)], 0)
+            if frontier_time is not None:
+                ft = np.zeros(budget, dtype=seed_time.dtype)
+                pt = frontier_time[parent[valid]]
+                # time bound of a discovered node = its discovering parent's
+                nd = len(disc)
+                first_slot = slot_of[vsrc] - base
+                keep = (first_slot >= 0) & (first_slot < nd)
+                ft_new = np.zeros(nd, dtype=seed_time.dtype)
+                ft_new[first_slot[keep]] = pt[keep]
+                ft[:nd] = ft_new
+                frontier_time = ft
+        out = SamplerOutput(
+            node=np.concatenate(nodes),
+            row=np.concatenate(rows) if rows else np.zeros(0, np.int64),
+            col=np.concatenate(cols) if cols else np.zeros(0, np.int64),
+            edge=np.concatenate(eids) if eids else np.zeros(0, np.int64),
+            num_sampled_nodes=num_nodes, num_sampled_edges=num_edges,
+            seed_slots=np.arange(1, b + 1))
+        for t in touched:  # reset the lookup for the next call
+            slot_of[t] = -1
+        return out
+
+    # -- disjoint per-seed subgraphs (temporal mini-batches, paper C9) -------
+    def _sample_disjoint(self, seeds, seed_time):
+        outs = [self._sample_shared(
+            seeds[i:i + 1],
+            None if seed_time is None else seed_time[i:i + 1])
+            for i in range(len(seeds))]
+        return merge_disjoint(outs)
+
+
+def merge_disjoint(outs: List[SamplerOutput]) -> SamplerOutput:
+    """Concatenate per-seed subgraphs into one disjoint batch graph.
+
+    Keeps a single shared null sink at slot 0; per-sample slots are offset.
+    """
+    nodes, rows, cols, eids, seed_slots = [np.array([-1], np.int64)], [], [], [], []
+    offset = 1
+    n_hops = len(outs[0].num_sampled_nodes) - 1
+    num_nodes = [1 + sum(o.num_sampled_nodes[0] - 1 for o in outs)]
+    num_edges = [0] * n_hops
+    # interleave per hop to preserve BFS ordering across the batch
+    per_hop_nodes = [[] for _ in range(n_hops + 1)]
+    per_hop_edges = [[] for _ in range(n_hops)]
+    slot_maps = []
+    for o in outs:
+        m = np.zeros(len(o.node), np.int64)
+        slot_maps.append(m)
+    # assign new slots hop-block by hop-block
+    cursor = num_nodes[0]
+    starts = [np.cumsum([0] + o.num_sampled_nodes) for o in outs]
+    for h in range(n_hops + 1):
+        for oi, o in enumerate(outs):
+            lo, hi = starts[oi][h], starts[oi][h + 1]
+            blk = o.node[lo:hi]
+            if h == 0:
+                blk = blk[1:]  # drop per-sample null; slots 1..B map later
+                idx = np.arange(lo + 1, hi)
+            else:
+                idx = np.arange(lo, hi)
+            if h == 0:
+                new = np.arange(len(seed_slots) + 1,
+                                len(seed_slots) + 1 + len(blk))
+                seed_slots.extend(new)
+            else:
+                new = np.arange(cursor, cursor + len(blk))
+                cursor += len(blk)
+            slot_maps[oi][idx] = new
+            per_hop_nodes[h].append(blk)
+        if h > 0:
+            num_nodes.append(sum(len(b) for b in per_hop_nodes[h][-len(outs):]))
+    cursor0 = 1 + sum(len(b) for b in per_hop_nodes[0])
+    # fix hop>=1 slot assignment started after all seeds: recompute cursor
+    # (slots assigned above already sequential; edges remap below)
+    estarts = [np.cumsum([0] + o.num_sampled_edges) for o in outs]
+    for h in range(n_hops):
+        for oi, o in enumerate(outs):
+            lo, hi = estarts[oi][h], estarts[oi][h + 1]
+            r, c, e = o.row[lo:hi], o.col[lo:hi], o.edge[lo:hi]
+            pad = e < 0
+            rr = np.where(pad, 0, slot_maps[oi][r])
+            cc = np.where(pad, 0, slot_maps[oi][c])
+            per_hop_edges[h].append((rr, cc, e))
+        num_edges[h] = sum(len(t[0]) for t in per_hop_edges[h][-len(outs):])
+    node = np.concatenate([np.array([-1], np.int64)]
+                          + [b for h in per_hop_nodes for b in h])
+    row = np.concatenate([t[0] for h in per_hop_edges for t in h])
+    col = np.concatenate([t[1] for h in per_hop_edges for t in h])
+    eid = np.concatenate([t[2] for h in per_hop_edges for t in h])
+    return SamplerOutput(node=node, row=row, col=col, edge=eid,
+                         num_sampled_nodes=num_nodes,
+                         num_sampled_edges=num_edges,
+                         seed_slots=np.asarray(seed_slots, np.int64),
+                         metadata={"disjoint": True})

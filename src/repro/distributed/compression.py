@@ -1,0 +1,57 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+Error-feedback int8 quantisation (1-bit-Adam family, Seide et al. / EF-SGD):
+gradients are quantised to int8 with a per-tensor scale before the cross-pod
+(DCN) all-reduce; the quantisation residual is carried to the next step so
+the compression is unbiased in the long run. On the wire this cuts the pod-
+boundary gradient traffic 4x (bf16->int8 would be 2x; fp32->int8 is 4x).
+
+Off by default; enabled via OptConfig-style flag in the train loop. The
+correctness property (training converges to the same loss neighbourhood) is
+tested in tests/test_distributed.py.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads: Any, residual: Any) -> Tuple[Any, Any]:
+    """(grads + residual) -> int8 payload; returns (payload, new_residual)."""
+    leaves_g, treedef = jax.tree_util.tree_flatten(grads)
+    leaves_r = jax.tree_util.tree_leaves(residual)
+    qs, ss, rs = [], [], []
+    for g, r in zip(leaves_g, leaves_r):
+        gf = g.astype(jnp.float32) + r
+        q, s = quantize_int8(gf)
+        qs.append(q)
+        ss.append(s)
+        rs.append(gf - dequantize_int8(q, s))
+    payload = (jax.tree_util.tree_unflatten(treedef, qs),
+               jax.tree_util.tree_unflatten(treedef, ss))
+    return payload, jax.tree_util.tree_unflatten(treedef, rs)
+
+
+def decompress_grads(payload: Any, grads_like: Any) -> Any:
+    q_tree, s_tree = payload
+    return jax.tree_util.tree_map(
+        lambda q, s, g: dequantize_int8(q, s).astype(g.dtype),
+        q_tree, s_tree, grads_like)
+
+
+def init_residual(grads_like: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)

@@ -1,0 +1,33 @@
+"""Pallas TPU kernels for the compute hot spots of the PyG 2.0 reproduction.
+
+Each kernel lives in its own subpackage with three files:
+
+  <name>.py  — the ``pl.pallas_call`` kernel with explicit BlockSpec tiling
+  ops.py     — the jit'd public wrapper (dispatches kernel on TPU, oracle on CPU)
+  ref.py     — the pure-jnp oracle used for validation and as the XLA fallback
+
+Kernels:
+  spmm             blocked-ELL sparse @ dense (message-passing fast path, C2)
+  grouped_matmul   per-group GEMM {H_T W_T} (hetero projections C4 + MoE experts)
+  segment_softmax  softmax over variable-length segments (GAT, explainer masks)
+  flash_attention  online-softmax attention (LM prefill/train path)
+"""
+
+USE_PALLAS_ENV = "REPRO_USE_PALLAS"
+
+
+def use_pallas() -> bool:
+    """Whether to dispatch Pallas kernels (TPU) or the jnp oracle (CPU/XLA).
+
+    On this CPU container Pallas kernels run only in ``interpret=True`` mode,
+    which we exercise in tests; production entry points leave this off so the
+    XLA oracle path (itself fused by jit) is used.
+    """
+    import os
+
+    import jax
+
+    val = os.environ.get(USE_PALLAS_ENV)
+    if val is not None:
+        return val not in ("0", "false", "False")
+    return jax.default_backend() == "tpu"

@@ -1,0 +1,46 @@
+"""Public attention entry point: Pallas on TPU, chunked-jnp on XLA."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels import use_pallas
+from repro.kernels.flash_attention import ref
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+
+# Below this KV length the naive path is cheaper than blocking overhead.
+CHUNKED_THRESHOLD = 2048
+
+# XLA-path blockwise schedule: 'rect' (rectangular + masking, baseline) or
+# 'tri' (diagonal-banded lower-triangle scan — half the attention FLOPs;
+# §Perf beyond-paper iteration, switchable at trace time like the MoE impl).
+_ATTN_IMPL = "rect"
+
+
+def set_attention_impl(impl: str):
+    global _ATTN_IMPL
+    assert impl in ("rect", "tri")
+    _ATTN_IMPL = impl
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              causal: bool = True, q_offset: int = 0,
+              force_pallas: Optional[bool] = None,
+              interpret: bool = False) -> jnp.ndarray:
+    """GQA attention. q: (B, Sq, H, D); k/v: (B, Sk, Hkv, D)."""
+    take_pallas = use_pallas() if force_pallas is None else force_pallas
+    if take_pallas:
+        h, hkv = q.shape[2], k.shape[2]
+        if hkv != h:
+            k = jnp.repeat(k, h // hkv, axis=2)
+            v = jnp.repeat(v, h // hkv, axis=2)
+        return flash_attention_pallas(q, k, v, causal=causal,
+                                      q_offset=q_offset, interpret=interpret)
+    if k.shape[1] <= CHUNKED_THRESHOLD:
+        return ref.mha_reference(q, k, v, causal=causal, q_offset=q_offset)
+    if (_ATTN_IMPL == "tri" and causal and q_offset == 0
+            and q.shape[1] == k.shape[1]):
+        return ref.mha_chunked_causal(q, k, v)
+    return ref.mha_chunked(q, k, v, causal=causal, q_offset=q_offset)

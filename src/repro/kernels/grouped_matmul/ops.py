@@ -1,0 +1,71 @@
+"""Public grouped-matmul entry points: packing + kernel/oracle dispatch."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import use_pallas
+from repro.kernels.grouped_matmul import ref
+from repro.kernels.grouped_matmul.grouped_matmul import grouped_matmul_pallas
+
+
+def grouped_matmul(x: jnp.ndarray, w: jnp.ndarray, group_sizes: jnp.ndarray,
+                   *, force_pallas: Optional[bool] = None,
+                   interpret: bool = False) -> jnp.ndarray:
+    """Grouped GEMM over group-sorted rows. Dispatches kernel or XLA oracle.
+
+    The XLA path uses ``jax.lax.ragged_dot`` when available (native grouped
+    matmul lowering) and falls back to the gather-einsum oracle otherwise.
+    """
+    take_pallas = use_pallas() if force_pallas is None else force_pallas
+    if take_pallas:
+        xp, tile_group, row_map, m_orig = pack_rows(x, group_sizes)
+        # pad K / N up to MXU tile multiples
+        k, n = x.shape[1], w.shape[2]
+        kp, np_ = -(-k // 128) * 128, -(-n // 128) * 128
+        if kp != k:
+            xp = jnp.pad(xp, ((0, 0), (0, kp - k)))
+            w = jnp.pad(w, ((0, 0), (0, kp - k), (0, 0)))
+        if np_ != n:
+            w = jnp.pad(w, ((0, 0), (0, 0), (0, np_ - n)))
+        out = grouped_matmul_pallas(xp, w, tile_group, interpret=interpret)
+        return out[row_map, :n]
+    try:
+        return jax.lax.ragged_dot(x, w, group_sizes.astype(jnp.int32))
+    except Exception:  # pragma: no cover - older jax
+        return ref.grouped_matmul(x, w, group_sizes)
+
+
+def pack_rows(x: jnp.ndarray, group_sizes: jnp.ndarray, block_m: int = 128
+              ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, int]:
+    """Pad each group's rows to a multiple of ``block_m`` (host-side shapes).
+
+    Returns (x_packed, tile_group, row_map) where ``row_map`` scatters packed
+    rows back to original positions: ``out_orig = out_packed[row_map]``.
+    NOTE: requires concrete ``group_sizes`` (host), as padding changes shapes.
+    """
+    sizes = np.asarray(group_sizes)
+    g = len(sizes)
+    padded = -(-sizes // block_m) * block_m  # per-group padded row counts
+    padded = np.maximum(padded, block_m)  # empty groups still occupy one tile
+    total = int(padded.sum())
+    src_rows = np.zeros(total, np.int64)  # packed slot -> original row
+    row_map = np.zeros(int(sizes.sum()), np.int64)  # original row -> packed slot
+    tile_group = np.zeros(total // block_m, np.int32)
+    off_orig, off_pack, off_tile = 0, 0, 0
+    for gi in range(g):
+        s, p = int(sizes[gi]), int(padded[gi])
+        src_rows[off_pack:off_pack + s] = np.arange(off_orig, off_orig + s)
+        # padding slots re-read row 0 (masked out by row_map on the way back)
+        row_map[off_orig:off_orig + s] = np.arange(off_pack, off_pack + s)
+        tile_group[off_tile:off_tile + p // block_m] = gi
+        off_orig += s
+        off_pack += p
+        off_tile += p // block_m
+    xp = jnp.take(x, jnp.asarray(src_rows), axis=0)
+    return xp, jnp.asarray(tile_group), jnp.asarray(row_map), int(sizes.sum())

@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for grouped (segmented) matmul: {H_T @ W_T}_{T in types}.
+
+The paper (§2.2) implements per-type projections of heterogeneous node sets
+with CUTLASS grouped GEMM; the same primitive is MoE expert compute
+(MegaBlocks-style). Rows of ``x`` are sorted by group; ``group_sizes[g]``
+rows belong to group ``g`` and are multiplied by ``w[g]``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def group_ids_from_sizes(group_sizes: jnp.ndarray, num_rows: int) -> jnp.ndarray:
+    """Per-row group id from group sizes (rows sorted by group)."""
+    offsets = jnp.cumsum(group_sizes)
+    return jnp.searchsorted(offsets, jnp.arange(num_rows, dtype=jnp.int32),
+                            side="right").astype(jnp.int32)
+
+
+def grouped_matmul(x: jnp.ndarray, w: jnp.ndarray,
+                   group_sizes: jnp.ndarray) -> jnp.ndarray:
+    """out[m] = x[m] @ w[g(m)].
+
+    Args:
+      x: (M, K) rows sorted by group.
+      w: (G, K, N) per-group weights.
+      group_sizes: (G,) int32, sums to M.
+    """
+    m = x.shape[0]
+    gids = group_ids_from_sizes(group_sizes, m)
+    # Oracle: gather per-row weight matrices. O(M*K*N) memory — fine for tests.
+    return jnp.einsum("mk,mkn->mn", x, w[gids]).astype(x.dtype)
+
+
+def grouped_matmul_dense(x: jnp.ndarray, w: jnp.ndarray,
+                         group_sizes: jnp.ndarray) -> jnp.ndarray:
+    """Alternative oracle via masked dense matmuls (checks the first one)."""
+    m = x.shape[0]
+    gids = group_ids_from_sizes(group_sizes, m)
+    outs = jnp.stack([x @ w[g] for g in range(w.shape[0])])  # (G, M, N)
+    return jnp.take_along_axis(outs, gids[None, :, None], axis=0)[0].astype(x.dtype)

@@ -1,0 +1,27 @@
+"""Public segment-softmax entry point with kernel/oracle dispatch."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels import use_pallas
+from repro.kernels.segment_softmax import ref
+from repro.kernels.segment_softmax.segment_softmax import segment_softmax_pallas
+
+
+def segment_softmax(values: jnp.ndarray, segment_ids: jnp.ndarray,
+                    num_segments: int) -> jnp.ndarray:
+    """Softmax over segments (jit-friendly CSR-style API; XLA path)."""
+    return ref.segment_softmax(values, segment_ids, num_segments)
+
+
+def segment_softmax_ell(values: jnp.ndarray, mask: jnp.ndarray, *,
+                        force_pallas: Optional[bool] = None,
+                        interpret: bool = False) -> jnp.ndarray:
+    """Padded-panel segment softmax; Pallas on TPU, oracle elsewhere."""
+    take_pallas = use_pallas() if force_pallas is None else force_pallas
+    if take_pallas:
+        return segment_softmax_pallas(values, mask, interpret=interpret)
+    return ref.segment_softmax_ell(values, mask)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for segment softmax (GAT edge-attention, explainer masks).
+
+Softmax over variable-length segments of a value vector — in GNN terms:
+normalise attention logits over the incoming edges of each destination node.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_softmax(values: jnp.ndarray, segment_ids: jnp.ndarray,
+                    num_segments: int) -> jnp.ndarray:
+    """Numerically-stable softmax within each segment.
+
+    Args:
+      values: (E,) or (E, H) logits.
+      segment_ids: (E,) int32 segment of each entry (need not be sorted).
+    """
+    seg_max = jax.ops.segment_max(values, segment_ids, num_segments=num_segments)
+    seg_max = jnp.where(jnp.isfinite(seg_max), seg_max, 0.0)
+    shifted = values - seg_max[segment_ids]
+    exp = jnp.exp(shifted)
+    seg_sum = jax.ops.segment_sum(exp, segment_ids, num_segments=num_segments)
+    return exp / jnp.maximum(seg_sum[segment_ids], 1e-16)
+
+
+def segment_softmax_ell(values: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Oracle for the padded-panel layout: softmax along axis 1 where mask."""
+    neg = jnp.where(mask, values, -jnp.inf)
+    mx = jnp.max(neg, axis=1, keepdims=True)
+    mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+    ex = jnp.where(mask, jnp.exp(values - mx), 0.0)
+    den = jnp.maximum(ex.sum(axis=1, keepdims=True), 1e-16)
+    return ex / den

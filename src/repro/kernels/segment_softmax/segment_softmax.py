@@ -1,0 +1,52 @@
+"""Segment-softmax Pallas TPU kernel over padded edge panels.
+
+TPU adaptation of the CUDA segment softmax used for GAT edge attention:
+edges sorted by destination are packed into (row, K) panels (same blocked-ELL
+layout as the SpMM kernel), turning the ragged per-destination softmax into a
+dense masked row softmax that vectorises over 128 lanes. Row blocks are tiled
+into VMEM; max/sum reductions run on the VPU within a tile.
+
+Grid: ``(num_row_blocks,)`` with the full K panel per block in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BR = 8
+
+
+def _segment_softmax_kernel(val_ref, mask_ref, out_ref):
+    vals = val_ref[...].astype(jnp.float32)
+    mask = mask_ref[...] != 0
+    neg = jnp.where(mask, vals, -jnp.inf)
+    mx = jnp.max(neg, axis=1, keepdims=True)
+    mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+    ex = jnp.where(mask, jnp.exp(vals - mx), 0.0)
+    den = jnp.maximum(jnp.sum(ex, axis=1, keepdims=True), 1e-16)
+    out_ref[...] = (ex / den).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def segment_softmax_pallas(values: jnp.ndarray, mask: jnp.ndarray, *,
+                           block_rows: int = DEFAULT_BR,
+                           interpret: bool = False) -> jnp.ndarray:
+    """Masked row softmax over (R, K) panels. R % block_rows == 0."""
+    rows, k = values.shape
+    assert rows % block_rows == 0, (rows, block_rows)
+    grid = (rows // block_rows,)
+    return pl.pallas_call(
+        _segment_softmax_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, k), values.dtype),
+        interpret=interpret,
+    )(values, mask.astype(jnp.int32))

@@ -1,0 +1,65 @@
+"""Public SpMM entry points with kernel/oracle dispatch + format packing."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import use_pallas
+from repro.kernels.spmm import ref
+from repro.kernels.spmm.spmm import spmm_ell_pallas
+
+
+def spmm_csr(indptr: jnp.ndarray, indices: jnp.ndarray, x: jnp.ndarray,
+             weight: Optional[jnp.ndarray] = None, *, num_rows: int,
+             reduce: str = "sum") -> jnp.ndarray:
+    """CSR SpMM — jit-friendly; XLA path everywhere, Pallas on TPU via ELL.
+
+    The CSR->ELL conversion requires host-side shape decisions, so the Pallas
+    path is taken only when the caller pre-packs via :func:`csr_to_ell`;
+    direct CSR calls use the fused XLA oracle (itself the paper's "sorted
+    segment reduction" fast path).
+    """
+    return ref.spmm_csr(indptr, indices, x, weight, num_rows=num_rows,
+                        reduce=reduce)
+
+
+def csr_to_ell(indptr: np.ndarray, indices: np.ndarray,
+               weight: Optional[np.ndarray] = None, *, block_rows: int = 8,
+               k: Optional[int] = None
+               ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+    """Host-side CSR -> blocked-ELL packing (rows padded to `k` neighbors)."""
+    indptr = np.asarray(indptr)
+    indices = np.asarray(indices)
+    num_rows = len(indptr) - 1
+    deg = np.diff(indptr)
+    if k is None:
+        k = max(int(deg.max()) if num_rows else 1, 1)
+    rows_pad = -(-num_rows // block_rows) * block_rows
+    ell_idx = np.full((rows_pad, k), -1, np.int32)
+    ell_w = None if weight is None else np.zeros((rows_pad, k), np.float32)
+    for r in range(num_rows):
+        lo, hi = int(indptr[r]), int(indptr[r + 1])
+        take = min(hi - lo, k)
+        ell_idx[r, :take] = indices[lo:lo + take]
+        if weight is not None:
+            ell_w[r, :take] = weight[lo:lo + take]
+    return ell_idx, ell_w
+
+
+def spmm_ell(ell_idx: jnp.ndarray, ell_w: Optional[jnp.ndarray],
+             x: jnp.ndarray, *, reduce: str = "sum",
+             force_pallas: Optional[bool] = None,
+             interpret: bool = False) -> jnp.ndarray:
+    """Blocked-ELL SpMM: Pallas kernel on TPU (or when forced), oracle else."""
+    take_pallas = use_pallas() if force_pallas is None else force_pallas
+    if take_pallas:
+        feat = x.shape[1]
+        bf = 128 if feat % 128 == 0 else feat
+        return spmm_ell_pallas(ell_idx, ell_w, x, reduce=reduce,
+                               block_feat=bf, interpret=interpret)
+    return ref.spmm_ell(ell_idx, ell_w, x, reduce=reduce)

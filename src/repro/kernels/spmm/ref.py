@@ -1,0 +1,76 @@
+"""Pure-jnp oracle for CSR SpMM (sparse adjacency @ dense features).
+
+``out[r] = reduce_{e in [indptr[r], indptr[r+1])} w[e] * x[indices[e]]``
+
+This is the message-passing fast path of PyG 2.0 §2.2 ("if the EdgeIndex is
+sorted by row or column, we can efficiently leverage SpMMs and segmented
+aggregations"). XLA fuses the gather + segment reduction well on CPU/GPU;
+the Pallas kernel in ``spmm.py`` is the TPU-native version.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _row_ids(indptr: jnp.ndarray, num_edges: int) -> jnp.ndarray:
+    """Expand a compressed pointer into per-edge row ids."""
+    return (jnp.searchsorted(indptr, jnp.arange(num_edges, dtype=jnp.int32),
+                             side="right") - 1).astype(jnp.int32)
+
+
+def spmm_csr(indptr: jnp.ndarray, indices: jnp.ndarray, x: jnp.ndarray,
+             weight: Optional[jnp.ndarray] = None, *, num_rows: int,
+             reduce: str = "sum") -> jnp.ndarray:
+    """Reference CSR SpMM with sum/mean/max/min reduction."""
+    num_edges = indices.shape[0]
+    if num_edges == 0:
+        fill = 0.0
+        return jnp.full((num_rows,) + x.shape[1:], fill, dtype=x.dtype)
+    rows = _row_ids(indptr, num_edges)
+    gathered = jnp.take(x, indices, axis=0)
+    if weight is not None:
+        gathered = gathered * weight.reshape((-1,) + (1,) * (x.ndim - 1)).astype(x.dtype)
+    if reduce == "sum":
+        return jax.ops.segment_sum(gathered, rows, num_segments=num_rows)
+    if reduce == "mean":
+        s = jax.ops.segment_sum(gathered, rows, num_segments=num_rows)
+        cnt = (indptr[1:] - indptr[:-1]).astype(x.dtype)
+        return s / jnp.maximum(cnt, 1).reshape((-1,) + (1,) * (x.ndim - 1))
+    if reduce == "max":
+        out = jax.ops.segment_max(gathered, rows, num_segments=num_rows)
+        return jnp.where(jnp.isfinite(out), out, 0.0).astype(x.dtype)
+    if reduce == "min":
+        out = jax.ops.segment_min(gathered, rows, num_segments=num_rows)
+        return jnp.where(jnp.isfinite(out), out, 0.0).astype(x.dtype)
+    raise ValueError(f"unknown reduce: {reduce}")
+
+
+def spmm_ell(ell_idx: jnp.ndarray, ell_w: Optional[jnp.ndarray],
+             x: jnp.ndarray, *, reduce: str = "sum") -> jnp.ndarray:
+    """Reference for the blocked-ELL layout the Pallas kernel consumes.
+
+    ``ell_idx``: (R, K) int32 neighbor ids, ``-1`` marks padding.
+    ``ell_w``:   (R, K) optional weights.
+    """
+    mask = ell_idx >= 0
+    safe = jnp.maximum(ell_idx, 0)
+    gathered = x[safe]  # (R, K, F)
+    if ell_w is not None:
+        gathered = gathered * ell_w[..., None].astype(x.dtype)
+    if reduce == "sum" or reduce == "mean":
+        out = jnp.where(mask[..., None], gathered, 0).sum(axis=1)
+        if reduce == "mean":
+            cnt = jnp.maximum(mask.sum(axis=1), 1).astype(x.dtype)
+            out = out / cnt[:, None]
+        return out.astype(x.dtype)
+    if reduce == "max":
+        out = jnp.where(mask[..., None], gathered, -jnp.inf).max(axis=1)
+        return jnp.where(jnp.isfinite(out), out, 0.0).astype(x.dtype)
+    if reduce == "min":
+        out = jnp.where(mask[..., None], gathered, jnp.inf).min(axis=1)
+        return jnp.where(jnp.isfinite(out), out, 0.0).astype(x.dtype)
+    raise ValueError(f"unknown reduce: {reduce}")

@@ -1,0 +1,119 @@
+"""Trip-count-aware collective accounting from optimized HLO text.
+
+GSPMD hoists loop-invariant collectives (the FSDP param all-gathers of
+scan-stacked weights) into ENTRY, but per-layer tensor-parallel collectives
+stay inside ``while`` bodies and execute once per scan iteration. This
+walker parses the HLO into computations, finds every ``while``, reads the
+trip count out of its condition computation (the loop-bound constant), and
+weights collective payload bytes by the product of enclosing trip counts.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+    "pred": 1, "s64": 8, "u64": 8, "f64": 8, "s16": 2, "u16": 2,
+    "f8e4m3": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(
+    r"\b(f32|bf16|f16|f64|s64|s32|s16|s8|u64|u32|u16|u8|pred|f8e4m3|f8e5m2|"
+    r"c64|c128)\[([0-9,]*)\]")
+_WHILE_RE = re.compile(
+    r"while\(.*?condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_COLL_RE = re.compile(
+    r"=\s+[^=]*?\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start)?\(")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        if not line.startswith(" ") and "{" in line and ("(" in line):
+            head = line.strip()
+            if head.startswith("ENTRY"):
+                name = head.split()[1]
+            else:
+                name = head.split("(")[0].strip()
+            cur = name.lstrip("%").rstrip()
+            comps.setdefault(cur, [])
+        elif cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def _entry_name(hlo: str) -> str:
+    for line in hlo.splitlines():
+        if line.startswith("ENTRY"):
+            return line.split()[1].lstrip("%").split("(")[0]
+    return "main"
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Loop bound = the largest integer constant in the condition."""
+    best = 1
+    for l in cond_lines:
+        for m in _CONST_RE.finditer(l):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def collective_stats(hlo: str) -> Dict[str, Dict[str, float]]:
+    comps = parse_computations(hlo)
+    entry = _entry_name(hlo)
+    out = {c: {"count": 0, "bytes": 0.0} for c in COLLECTIVES}
+    seen = set()
+
+    def walk(comp: str, mult: float):
+        if comp not in comps:
+            return
+        key = (comp, mult)
+        if key in seen:  # guard against pathological recursion
+            return
+        seen.add(key)
+        for line in comps[comp]:
+            s = line.strip()
+            wm = _WHILE_RE.search(s)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                trip = _trip_count(comps.get(cond, []))
+                walk(body, mult * trip)
+                continue
+            cm = _COLL_RE.search(s)
+            if cm and not s.split("=")[1].strip().startswith("get-tuple"):
+                op, start = cm.group(1), cm.group(2)
+                if start == "-done":
+                    continue
+                shapes = _SHAPE_RE.findall(s)
+                if not shapes:
+                    continue
+                lhs, rhs = shapes[0], shapes[1:]
+                operands = rhs if rhs else [lhs]
+                nbytes = sum(_shape_bytes(dt, dims) for dt, dims in operands)
+                out[op]["count"] += mult
+                out[op]["bytes"] += mult * nbytes
+
+    # find matching entry computation key (suffix variations)
+    entry_key = None
+    for k in comps:
+        if k.startswith(entry):
+            entry_key = k
+            break
+    walk(entry_key or entry, 1.0)
+    return out

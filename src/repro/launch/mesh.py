@@ -1,0 +1,28 @@
+"""Production meshes for the multi-pod dry-run (and real deployments).
+
+Functions, not module-level constants: importing this module never touches
+jax device state (device count is locked at first jax init, and only
+``dryrun.py`` forces 512 host devices).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (host) devices exist — tests only."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# TPU v5e hardware constants (per chip) used by the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # bytes/s
+ICI_BW = 50e9                 # bytes/s per link

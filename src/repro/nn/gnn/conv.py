@@ -1,0 +1,177 @@
+"""GNN operator zoo — the five architectures benchmarked in paper Tables 1-2
+(GCN, GraphSAGE, GIN, GAT, EdgeCNN) built on the MessagePassing framework.
+
+GCN/SAGE/GIN use the *fused* SpMM path (default message + sum/mean/max);
+GAT and EdgeCNN exercise the edge-level materialisation path (custom
+messages, segment softmax) — together they cover both compute paths of C2.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.edge_index import EdgeIndex
+from repro.core.message_passing import MessagePassing
+from repro.kernels.segment_softmax import ops as softmax_ops
+from repro.nn.layers import MLP, Linear
+from repro.nn.module import glorot_uniform
+
+
+def gcn_norm(edge_index, num_nodes: int, add_self_loops: bool = True):
+    """Symmetric GCN weights WITHOUT materialising self-loop edges.
+
+    Returns (edge_weight, self_weight): the self-loop contribution
+    ``D^-1/2 I D^-1/2 x`` is applied as ``self_weight[:, None] * x`` instead
+    of appending edges — keeps the BFS edge ordering intact so layer-wise
+    trimming (C8) can slice precomputed weights exactly.
+    """
+    src = edge_index.src if isinstance(edge_index, EdgeIndex) else edge_index[0]
+    dst = edge_index.dst if isinstance(edge_index, EdgeIndex) else edge_index[1]
+    deg = jax.ops.segment_sum(jnp.ones_like(dst, dtype=jnp.float32), dst,
+                              num_segments=num_nodes)
+    if add_self_loops:
+        deg = deg + 1.0
+    dinv = jnp.where(deg > 0, jax.lax.rsqrt(jnp.maximum(deg, 1e-12)), 0.0)
+    w = dinv[src] * dinv[dst]
+    self_w = dinv * dinv if add_self_loops else jnp.zeros_like(dinv)
+    return w, self_w
+
+
+class GCNConv(MessagePassing):
+    def __init__(self, in_features: int, out_features: int,
+                 add_self_loops: bool = True, bias: bool = True):
+        super().__init__(aggr="sum")
+        self.lin = Linear(in_features, out_features, bias=bias)
+        self.add_self_loops = add_self_loops
+
+    def init(self, key):
+        return {"lin": self.lin.init(key)}
+
+    def apply(self, params, x, edge_index, num_nodes: Optional[int] = None,
+              edge_weight: Optional[jnp.ndarray] = None,
+              self_weight: Optional[jnp.ndarray] = None, **kw):
+        n = num_nodes if num_nodes is not None else x.shape[0]
+        if edge_weight is None:
+            edge_weight, self_weight = gcn_norm(
+                edge_index if isinstance(edge_index, EdgeIndex)
+                else EdgeIndex(edge_index, n, n), n, self.add_self_loops)
+        x = self.lin.apply(params["lin"], x)
+        out = self.propagate(params, edge_index, x,
+                             edge_weight=edge_weight, num_nodes=n, **kw)
+        if self_weight is not None:
+            out = out + self_weight[:, None].astype(x.dtype) * x
+        return out
+
+
+class SAGEConv(MessagePassing):
+    def __init__(self, in_features: int, out_features: int,
+                 aggr: str = "mean", bias: bool = True):
+        super().__init__(aggr=aggr)
+        self.lin_l = Linear(in_features, out_features, bias=bias)  # neighbor
+        self.lin_r = Linear(in_features, out_features, bias=False)  # root
+
+    def init(self, key):
+        k1, k2 = jax.random.split(key)
+        return {"lin_l": self.lin_l.init(k1), "lin_r": self.lin_r.init(k2)}
+
+    def apply(self, params, x, edge_index, num_nodes: Optional[int] = None,
+              **kw):
+        n = num_nodes if num_nodes is not None else (
+            x[1].shape[0] if isinstance(x, tuple) else x.shape[0])
+        agg = self.propagate(params, edge_index, x, num_nodes=n, **kw)
+        x_dst = x[1] if isinstance(x, tuple) else x
+        return (self.lin_l.apply(params["lin_l"], agg)
+                + self.lin_r.apply(params["lin_r"], x_dst))
+
+
+class GINConv(MessagePassing):
+    def __init__(self, in_features: int, out_features: int,
+                 hidden: Optional[int] = None, train_eps: bool = True):
+        super().__init__(aggr="sum")
+        hidden = hidden or out_features
+        self.mlp = MLP([in_features, hidden, out_features])
+        self.train_eps = train_eps
+
+    def init(self, key):
+        return {"mlp": self.mlp.init(key),
+                "eps": jnp.asarray(0.0, jnp.float32)}
+
+    def apply(self, params, x, edge_index, num_nodes: Optional[int] = None,
+              **kw):
+        n = num_nodes if num_nodes is not None else x.shape[0]
+        agg = self.propagate(params, edge_index, x, num_nodes=n, **kw)
+        x_dst = x[1] if isinstance(x, tuple) else x
+        return self.mlp.apply(params["mlp"], (1.0 + params["eps"]) * x_dst + agg)
+
+
+class GATConv(MessagePassing):
+    """Graph attention (GAT): exercises segment softmax + materialised path."""
+
+    def __init__(self, in_features: int, out_features: int, heads: int = 1,
+                 negative_slope: float = 0.2, concat: bool = True):
+        super().__init__(aggr="sum")
+        self.heads = heads
+        self.out_per_head = out_features // heads if concat else out_features
+        self.concat = concat
+        self.lin = Linear(in_features, heads * self.out_per_head, bias=False)
+        self.negative_slope = negative_slope
+
+    def init(self, key):
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        h, f = self.heads, self.out_per_head
+        return {
+            "lin": self.lin.init(k1),
+            "att_src": glorot_uniform(k2, (h, f)),
+            "att_dst": glorot_uniform(k3, (h, f)),
+            "bias": jnp.zeros((h * f if self.concat else f,), jnp.float32),
+        }
+
+    def apply(self, params, x, edge_index, num_nodes: Optional[int] = None,
+              message_callback=None, return_attention: bool = False, **kw):
+        n = num_nodes if num_nodes is not None else x.shape[0]
+        h, f = self.heads, self.out_per_head
+        z = self.lin.apply(params["lin"], x).reshape(-1, h, f)
+        if isinstance(edge_index, EdgeIndex):
+            src, dst = edge_index.src, edge_index.dst
+        else:
+            src, dst = edge_index[0], edge_index[1]
+        alpha_src = (z * params["att_src"]).sum(-1)  # (N, H)
+        alpha_dst = (z * params["att_dst"]).sum(-1)
+        logits = alpha_src[src] + alpha_dst[dst]  # (E, H)
+        logits = jax.nn.leaky_relu(logits, self.negative_slope)
+        alpha = softmax_ops.segment_softmax(logits, dst, n)  # (E, H)
+        msg = z[src] * alpha[..., None]  # (E, H, F)
+        if message_callback is not None:  # explainer hook on edge messages
+            msg = message_callback(msg.reshape(msg.shape[0], -1)).reshape(
+                msg.shape)
+        out = jax.ops.segment_sum(msg, dst, num_segments=n)  # (N, H, F)
+        out = out.reshape(n, h * f) if self.concat else out.mean(1)
+        out = out + params["bias"]
+        if return_attention:
+            return out, alpha
+        return out
+
+
+class EdgeConv(MessagePassing):
+    """EdgeCNN (DGCNN edge convolution): max_j MLP([x_i, x_j - x_i])."""
+
+    def __init__(self, in_features: int, out_features: int,
+                 hidden: Optional[int] = None):
+        super().__init__(aggr="max")
+        hidden = hidden or out_features
+        self.mlp = MLP([2 * in_features, hidden, out_features])
+
+    def init(self, key):
+        return {"mlp": self.mlp.init(key)}
+
+    def message(self, params, x_j, x_i, edge_attr):
+        return self.mlp.apply(params["mlp"],
+                              jnp.concatenate([x_i, x_j - x_i], axis=-1))
+
+    def apply(self, params, x, edge_index, num_nodes: Optional[int] = None,
+              **kw):
+        n = num_nodes if num_nodes is not None else x.shape[0]
+        return self.propagate(params, edge_index, x, num_nodes=n, **kw)

@@ -1,0 +1,88 @@
+"""Stacked GNN models (the paper's Table 1-2 benchmark subjects).
+
+``BasicGNN`` stacks one conv type with ReLU between layers and supports the
+paper's two execution-mode axes:
+
+* ``jit`` on/off — paper's eager vs ``torch.compile`` (Table 1);
+* ``trim`` on/off — layer-wise trimming of BFS subgraphs (Table 2).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.trim import trim_to_layer
+from repro.nn.gnn.conv import EdgeConv, GATConv, GCNConv, GINConv, SAGEConv
+from repro.nn.module import Module
+
+_CONVS = {"gcn": GCNConv, "sage": SAGEConv, "gin": GINConv, "gat": GATConv,
+          "edgecnn": EdgeConv}
+
+
+class BasicGNN(Module):
+    def __init__(self, conv: str, in_features: int, hidden: int,
+                 out_features: int, num_layers: int, **conv_kwargs):
+        self.conv_name = conv
+        cls = _CONVS[conv]
+        dims = ([in_features] + [hidden] * (num_layers - 1) + [out_features])
+        self.convs = []
+        for i in range(num_layers):
+            kw = dict(conv_kwargs)
+            if conv == "gat" and i == num_layers - 1:
+                kw["concat"] = False  # head-average final layer (PyG default)
+            self.convs.append(cls(dims[i], dims[i + 1], **kw))
+        self.num_layers = num_layers
+
+    def init(self, key):
+        keys = jax.random.split(key, len(self.convs))
+        return {f"conv{i}": c.init(k)
+                for i, (c, k) in enumerate(zip(self.convs, keys))}
+
+    def apply(self, params, x, edge_index,
+              num_nodes: Optional[int] = None,
+              num_sampled_nodes_per_hop: Optional[Sequence[int]] = None,
+              num_sampled_edges_per_hop: Optional[Sequence[int]] = None,
+              trim: bool = False, message_callback=None):
+        """Forward. With ``trim=True`` the per-hop sampler budgets drive
+        progressive static slicing (paper C8).
+
+        For degree-normalised convs (GCN) the normalisation is computed ONCE
+        on the full batch graph and *sliced* alongside edges/nodes, so
+        trimming preserves seed outputs exactly (the paper's invariant).
+        """
+        edge_weight = self_weight = None
+        if self.conv_name == "gcn":
+            from repro.nn.gnn.conv import gcn_norm
+            n0 = num_nodes if num_nodes is not None else x.shape[0]
+            edge_weight, self_weight = gcn_norm(edge_index, n0)
+        for i, conv in enumerate(self.convs):
+            extra = {}
+            if trim and num_sampled_nodes_per_hop is not None:
+                x, edge_index, edge_weight = trim_to_layer(
+                    i, num_sampled_nodes_per_hop, num_sampled_edges_per_hop,
+                    x, edge_index, edge_attr=edge_weight)
+                n = x.shape[0]
+                if self_weight is not None:
+                    self_weight = self_weight[:n]
+            else:
+                n = num_nodes if num_nodes is not None else x.shape[0]
+            if self.conv_name == "gcn":
+                extra = {"edge_weight": edge_weight,
+                         "self_weight": self_weight}
+            x = conv.apply(params[f"conv{i}"], x, edge_index, num_nodes=n,
+                           message_callback=message_callback, **extra)
+            if i < len(self.convs) - 1:
+                x = jax.nn.relu(x)
+        return x
+
+
+def make_model(name: str, in_features: int, hidden: int, out_features: int,
+               num_layers: int) -> BasicGNN:
+    """The five paper-benchmark models with their conventional settings."""
+    if name == "gat":
+        return BasicGNN("gat", in_features, hidden, out_features, num_layers,
+                        heads=4)
+    return BasicGNN(name, in_features, hidden, out_features, num_layers)

@@ -1,0 +1,116 @@
+"""Core neural layers shared by the GNN zoo and the LM stack (pure JAX)."""
+
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import Module, glorot_uniform, lecun_normal, normal_init, split_keys
+
+
+class Linear(Module):
+    def __init__(self, in_features: int, out_features: int, bias: bool = True,
+                 dtype=jnp.float32, init: Callable = glorot_uniform):
+        self.in_features = in_features
+        self.out_features = out_features
+        self.bias = bias
+        self.dtype = dtype
+        self._init = init
+
+    def init(self, key):
+        kw, kb = jax.random.split(key)
+        p = {"w": self._init(kw, (self.in_features, self.out_features),
+                             self.dtype)}
+        if self.bias:
+            p["b"] = jnp.zeros((self.out_features,), self.dtype)
+        return p
+
+    def apply(self, params, x):
+        y = x @ params["w"]
+        if self.bias:
+            y = y + params["b"]
+        return y
+
+
+class MLP(Module):
+    """Plain MLP with activation between layers (used by GIN/EdgeCNN)."""
+
+    def __init__(self, dims: Sequence[int], act: Callable = jax.nn.relu,
+                 bias: bool = True, dtype=jnp.float32):
+        self.dims = tuple(dims)
+        self.act = act
+        self.layers = [Linear(dims[i], dims[i + 1], bias=bias, dtype=dtype)
+                       for i in range(len(dims) - 1)]
+
+    def init(self, key):
+        keys = jax.random.split(key, len(self.layers))
+        return {f"lin{i}": l.init(k) for i, (l, k) in
+                enumerate(zip(self.layers, keys))}
+
+    def apply(self, params, x):
+        for i, l in enumerate(self.layers):
+            x = l.apply(params[f"lin{i}"], x)
+            if i < len(self.layers) - 1:
+                x = self.act(x)
+        return x
+
+
+class Embedding(Module):
+    def __init__(self, num_embeddings: int, features: int, dtype=jnp.float32):
+        self.num_embeddings = num_embeddings
+        self.features = features
+        self.dtype = dtype
+
+    def init(self, key):
+        return {"embedding": normal_init(
+            key, (self.num_embeddings, self.features), self.dtype)}
+
+    def apply(self, params, ids):
+        return jnp.take(params["embedding"], ids, axis=0)
+
+    def attend(self, params, x):
+        """Tied-embedding logits: x @ E^T."""
+        return x @ params["embedding"].T
+
+
+class LayerNorm(Module):
+    def __init__(self, features: int, eps: float = 1e-5, dtype=jnp.float32):
+        self.features = features
+        self.eps = eps
+        self.dtype = dtype
+
+    def init(self, key):
+        return {"scale": jnp.ones((self.features,), self.dtype),
+                "bias": jnp.zeros((self.features,), self.dtype)}
+
+    def apply(self, params, x):
+        xf = x.astype(jnp.float32)
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + self.eps)
+        return (y * params["scale"] + params["bias"]).astype(x.dtype)
+
+
+class RMSNorm(Module):
+    def __init__(self, features: int, eps: float = 1e-6, dtype=jnp.float32,
+                 scale_plus_one: bool = False):
+        self.features = features
+        self.eps = eps
+        self.dtype = dtype
+        # gemma parameterises the scale as (1 + w) with w zero-init.
+        self.scale_plus_one = scale_plus_one
+
+    def init(self, key):
+        init = jnp.zeros if self.scale_plus_one else jnp.ones
+        return {"scale": init((self.features,), self.dtype)}
+
+    def apply(self, params, x):
+        xf = x.astype(jnp.float32)
+        var = (xf * xf).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + self.eps)
+        scale = params["scale"].astype(jnp.float32)
+        if self.scale_plus_one:
+            scale = 1.0 + scale
+        return (y * scale).astype(x.dtype)

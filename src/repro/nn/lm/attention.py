@@ -1,0 +1,164 @@
+"""GQA attention with qk-norm / QKV-bias / RoPE and KV-cache decode.
+
+Sharding: q/k/v projections keep an explicit (heads, head_dim) split so the
+head axis can be tensor-parallel over the mesh ``model`` axis; GSPMD pads
+uneven head counts. The full/prefill path dispatches to the chunked
+(flash-style) attention for long KV so 32k cells compile with O(block)
+working sets; decode attends one token against the cache with absolute-
+position causal masking (garbage slots beyond ``cache_pos`` are masked as
+"future").
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.kernels.flash_attention import ops as attn_ops
+from repro.nn.lm.config import ModelConfig
+from repro.nn.lm.rope import apply_rope
+from repro.nn.module import normal_init
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False):
+    d, q_dim, kv_dim, hd = cfg.d_model, cfg.q_dim, cfg.kv_dim, cfg.head_dim
+    dt = cfg.jnp_dtype
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": normal_init(ks[0], (d, cfg.n_heads, hd), dt, d ** -0.5),
+        "wk": normal_init(ks[1], (d, cfg.n_kv_heads, hd), dt, d ** -0.5),
+        "wv": normal_init(ks[2], (d, cfg.n_kv_heads, hd), dt, d ** -0.5),
+        "wo": normal_init(ks[3], (cfg.n_heads, hd, d), dt, q_dim ** -0.5),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((cfg.n_heads, hd), dt)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads, hd), dt)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads, hd), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+    return p
+
+
+def _rms(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt((xf * xf).mean(-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def attention_apply(
+    params, cfg: ModelConfig, x: jnp.ndarray, *,
+    positions: Optional[jnp.ndarray] = None,
+    causal: bool = True,
+    cache: Optional[dict] = None,
+    cache_pos: Optional[jnp.ndarray] = None,
+    kv_source: Optional[jnp.ndarray] = None,
+    use_rope: bool = True,
+    cross: bool = False,
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """Self- or cross-attention.
+
+    Modes:
+      * train/full:   cache=None                     -> (out, None)
+      * prefill:      cache=zeros, cache_pos=0       -> (out, filled cache)
+      * decode:       cache=state, cache_pos=t       -> (out, updated cache)
+      * cross decode: kv_source=None + cache holds precomputed enc K/V
+    """
+    b, s, d = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    if "bq" in params:
+        q = q + params["bq"]
+    if cfg.qk_norm:
+        q = _rms(q, params["q_norm"])
+    q = constrain(q, "bshd")
+
+    def project_kv(src):
+        k = jnp.einsum("bsd,dhk->bshk", src, params["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", src, params["wv"])
+        if "bk" in params:
+            k, v = k + params["bk"], v + params["bv"]
+        if cfg.qk_norm:
+            k = _rms(k, params["k_norm"])
+        return constrain(k, "bshd"), constrain(v, "bshd")
+
+    is_cross = cross or kv_source is not None
+
+    if is_cross and kv_source is None:
+        # decode-time cross attention: K/V precomputed at prefill
+        k, v = cache["k"], cache["v"]
+        out = attn_ops.attention(q, k, v, causal=False)
+        new_cache = cache
+    else:
+        src = kv_source if is_cross else x
+        k, v = project_kv(src)
+        if use_rope and not is_cross:
+            if positions is None:
+                positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+        if cache is None:
+            q_off = 0
+            out = attn_ops.attention(q, k, v, causal=causal and not is_cross,
+                                     q_offset=q_off)
+            new_cache = None
+        elif is_cross or s == cache["k"].shape[1]:
+            # prefill: write-through; attention over the fresh K/V directly
+            new_cache = dict(cache)
+            if is_cross:
+                new_cache.update(k=k, v=v)
+                out = attn_ops.attention(q, k, v, causal=False)
+            else:
+                kc = jax.lax.dynamic_update_slice(cache["k"], k, (0, 0, 0, 0))
+                vc = jax.lax.dynamic_update_slice(cache["v"], v, (0, 0, 0, 0))
+                new_cache.update(k=kc, v=vc)
+                out = attn_ops.attention(q, k, v, causal=causal)
+        else:
+            # decode: insert at cache_pos, attend over the whole cache with
+            # absolute-position masking
+            t = cache_pos
+            kc = jax.lax.dynamic_update_slice(
+                cache["k"], k, (0, t, 0, 0))
+            vc = jax.lax.dynamic_update_slice(
+                cache["v"], v, (0, t, 0, 0))
+            new_cache = dict(cache)
+            new_cache.update(k=kc, v=vc)
+            out = _decode_attention(q, kc, vc, t)
+    o = jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+    return o, new_cache
+
+
+def _decode_attention(q, k, v, cache_pos):
+    """One-token attention against a (B, Smax, Hkv, D) cache.
+
+    Explicit masked einsum (not the chunked path): with Sq == 1 the logits
+    tensor is (B, H, 1, Smax) — linear in Smax, no need for blocking.
+    """
+    b, sq, h, hd = q.shape
+    hkv = k.shape[2]
+    rep = h // hkv
+    scale = hd ** -0.5
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    kpos = jnp.arange(k.shape[1])
+    mask = kpos[None, None, None, :] <= (cache_pos + jnp.arange(sq))[None, None, :, None]
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    return out.astype(q.dtype)
+
+
+def make_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  dtype=None) -> dict:
+    dt = dtype or cfg.jnp_dtype
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dt),
+        "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dt),
+    }

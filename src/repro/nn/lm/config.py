@@ -1,0 +1,197 @@
+"""Model configuration dataclasses for the assigned LM-family architectures."""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_expert: int                 # hidden dim of each routed expert
+    num_shared: int = 0           # DeepSeekMoE shared experts
+    dense_residual: bool = False  # Arctic: dense FFN in parallel with MoE
+    moe_every: int = 1            # MoE FFN every k-th layer (Jamba: 2)
+    first_dense_ff: int = 0       # DeepSeekMoE: layer 0 uses a dense FFN
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaConfig:
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+    dt_rank: int = 0  # 0 -> ceil(d_model / 16)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 128
+    act: str = "silu"             # 'silu' -> SwiGLU, 'gelu' -> GeGLU
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    rope_theta: float = 1_000_000.0
+    tie_embeddings: bool = False
+    emb_scale: bool = False       # gemma: embeddings scaled by sqrt(d_model)
+    rms_scale_plus_one: bool = False  # gemma RMSNorm (1 + w)
+    moe: Optional[MoEConfig] = None
+    mamba: Optional[MambaConfig] = None
+    # attention layout: None -> every layer is attention; 0 -> attention-free
+    # (pure SSM); k>1 -> one attention layer per k layers (hybrid).
+    attn_every: Optional[int] = None
+    attn_offset: int = 0          # index of the attn layer within the period
+    arch_type: str = "decoder"    # 'decoder' | 'encdec'
+    n_enc_layers: int = 0
+    n_prefix_embeds: int = 0      # VLM patch / audio frame stub inputs
+    max_seq_len: int = 8192
+    dtype: str = "bfloat16"
+    # families for shape handling
+    family: str = "dense"         # dense | moe | hybrid | ssm | audio | vlm
+    subquadratic: bool = False    # True -> long_500k applicable
+
+    # ---------------------------------------------------------------- derived
+    @property
+    def jnp_dtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def d_inner(self) -> int:
+        return (self.mamba.expand * self.d_model) if self.mamba else 0
+
+    @property
+    def dt_rank(self) -> int:
+        if not self.mamba:
+            return 0
+        return self.mamba.dt_rank or math.ceil(self.d_model / 16)
+
+    @property
+    def period_len(self) -> int:
+        a = self.attn_every if (self.attn_every or 0) > 1 else 1
+        m = self.moe.moe_every if (self.moe and self.moe.moe_every > 1) else 1
+        return math.lcm(a, m)
+
+    @property
+    def n_head_layers(self) -> int:
+        """Unscanned prefix layers (DeepSeekMoE dense first layer)."""
+        return 1 if (self.moe and self.moe.first_dense_ff) else 0
+
+    @property
+    def n_periods(self) -> int:
+        body = self.n_layers - self.n_head_layers
+        assert body % self.period_len == 0, (self.name, body, self.period_len)
+        return body // self.period_len
+
+    def layer_desc(self, idx_in_period: int, is_head_layer: bool = False
+                   ) -> Tuple[str, str]:
+        """(mixer, ffn) descriptor for a layer position."""
+        if is_head_layer:  # DeepSeekMoE layer 0: dense FFN
+            return ("attn", "dense_first")
+        if self.attn_every == 0:
+            mixer = "mamba"
+        elif self.attn_every is None or self.attn_every == 1:
+            mixer = "attn"
+        else:
+            mixer = "attn" if idx_in_period % self.attn_every == self.attn_offset else "mamba"
+        if self.d_ff == 0:
+            ffn = "none"
+        elif self.moe is None:
+            ffn = "dense"
+        else:
+            ffn = "moe" if idx_in_period % self.moe.moe_every == (
+                self.moe.moe_every - 1 if self.moe.moe_every > 1 else 0) else "dense"
+        return (mixer, ffn)
+
+    @property
+    def period_descs(self) -> List[Tuple[str, str]]:
+        return [self.layer_desc(i) for i in range(self.period_len)]
+
+    def param_count(self) -> int:
+        """Analytic parameter count (cross-checked against the real pytree)."""
+        d, v = self.d_model, self.vocab_size
+        total = v * d  # embed
+        if not self.tie_embeddings:
+            total += v * d
+        total += d  # final norm
+
+        def ffn_params(ff):
+            return d * ff * 2 + ff * d  # gated: w_in(gate+up) + w_out
+
+        def attn_params():
+            p = d * self.q_dim + 2 * d * self.kv_dim + self.q_dim * d
+            if self.qkv_bias:
+                p += self.q_dim + 2 * self.kv_dim
+            if self.qk_norm:
+                p += 2 * self.head_dim
+            return p + d  # pre-norm
+
+        def mamba_params():
+            di, st, dr = self.d_inner, self.mamba.d_state, self.dt_rank
+            return (d * 2 * di + di * self.mamba.d_conv + di
+                    + di * (dr + 2 * st) + dr * di + di
+                    + di * st + di + di * d + d)
+
+        def moe_params():
+            m = self.moe
+            p = d * m.num_experts  # router
+            p += m.num_experts * ffn_params(m.d_expert)
+            p += m.num_shared * ffn_params(m.d_expert)
+            if m.dense_residual:
+                p += ffn_params(self.d_ff)
+            return p
+
+        layers = []
+        if self.n_head_layers:
+            layers.append(("attn", "dense_first"))
+        layers += self.period_descs * self.n_periods
+        for mixer, ffn in layers:
+            total += attn_params() if mixer == "attn" else mamba_params()
+            if ffn == "dense":
+                total += ffn_params(self.d_ff) + d
+            elif ffn == "dense_first":
+                total += ffn_params(self.moe.first_dense_ff) + d
+            elif ffn == "moe":
+                total += moe_params() + d
+        if self.arch_type == "encdec":
+            # encoder layers: self-attn + dense ffn; decoder adds cross-attn
+            total += self.n_enc_layers * (attn_params() + ffn_params(self.d_ff) + d)
+            total += d  # encoder final norm
+            # cross-attn blocks: attn weights + norm_x (the +d inside
+            # attn_params covers it)
+            total += self.n_layers * attn_params()
+        return total
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k + shared + dense residual)."""
+        if self.moe is None:
+            return self.param_count()
+        d = self.d_model
+        m = self.moe
+
+        def ffn_params(ff):
+            return d * ff * 3
+
+        full = self.param_count()
+        inactive_per_moe_layer = (m.num_experts - m.top_k) * ffn_params(m.d_expert)
+        n_moe_layers = sum(1 for desc in self.period_descs * self.n_periods
+                           if desc[1] == "moe")
+        return full - n_moe_layers * inactive_per_moe_layer

@@ -1,0 +1,30 @@
+"""Gated FFN (SwiGLU / GeGLU) — the dense MLP used by every assigned arch."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.lm.config import ModelConfig
+from repro.nn.module import normal_init
+
+_ACTS = {"silu": jax.nn.silu, "gelu": lambda x: jax.nn.gelu(x, approximate=True)}
+
+
+def init_ffn(key, cfg: ModelConfig, d_ff: int = 0):
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    dt = cfg.jnp_dtype
+    k1, k2 = jax.random.split(key)
+    return {
+        # gate & up fused along the last axis -> one matmul
+        "w_in": normal_init(k1, (d, 2, ff), dt, d ** -0.5),
+        "w_out": normal_init(k2, (ff, d), dt, ff ** -0.5),
+    }
+
+
+def ffn_apply(params, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    act = _ACTS[cfg.act]
+    gu = jnp.einsum("...d,dgf->...gf", x, params["w_in"])
+    gate, up = gu[..., 0, :], gu[..., 1, :]
+    return jnp.einsum("...f,fd->...d", act(gate) * up, params["w_out"])

@@ -1,0 +1,154 @@
+"""Mamba-1 selective SSM block (falcon-mamba, jamba hybrid layers).
+
+Train/prefill: chunked selective scan — ``lax.scan`` over sequence chunks
+carrying the (B, d_inner, d_state) SSM state, with a parallel associative
+scan *inside* each chunk. This bounds the activation working set to
+O(chunk) while keeping log-depth parallelism within chunks (the TPU-friendly
+middle ground between a pure sequential scan and a full-sequence associative
+scan whose O(S) blowup would sink the 500k cells).
+
+Decode: O(1) single-step recurrence on (conv_state, ssm_state) — this is why
+``long_500k`` is trivially cheap for SSM archs (the "KV cache" is the state).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.nn.lm.config import ModelConfig
+from repro.nn.module import normal_init
+
+CHUNK = 256
+
+
+def init_mamba(key, cfg: ModelConfig):
+    d, di = cfg.d_model, cfg.d_inner
+    st, dc, dr = cfg.mamba.d_state, cfg.mamba.d_conv, cfg.dt_rank
+    dt = cfg.jnp_dtype
+    ks = jax.random.split(key, 6)
+    # S4D-real initialisation for A
+    a_init = jnp.tile(jnp.arange(1, st + 1, dtype=jnp.float32)[None], (di, 1))
+    return {
+        "in_proj": normal_init(ks[0], (d, 2, di), dt, d ** -0.5),
+        "conv_w": normal_init(ks[1], (dc, di), dt, dc ** -0.5),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": normal_init(ks[2], (di, dr + 2 * st), dt, di ** -0.5),
+        "dt_proj_w": normal_init(ks[3], (dr, di), dt, dr ** -0.5),
+        "dt_proj_b": jnp.asarray(
+            jnp.log(jnp.expm1(jnp.exp(jax.random.uniform(
+                ks[4], (di,), jnp.float32, jnp.log(1e-3), jnp.log(1e-1))))),
+            dt),
+        "A_log": jnp.log(a_init),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": normal_init(ks[5], (di, d), dt, di ** -0.5),
+    }
+
+
+def _ssm_chunked(u, delta, B, C, A, D, init_state):
+    """Selective scan. u/delta: (b, s, di); B/C: (b, s, st); A: (di, st)."""
+    b, s, di = u.shape
+    st = B.shape[-1]
+    nchunks = s // CHUNK if s % CHUNK == 0 and s > CHUNK else 1
+    chunk = s // nchunks
+
+    da = jnp.exp(delta[..., None] * (-jnp.exp(A))[None, None])  # (b,s,di,st)
+    dbu = (delta * u)[..., None] * B[:, :, None, :]              # (b,s,di,st)
+
+    def chunk_step(h0, blk):
+        da_c, dbu_c = blk  # (chunk, b, di, st)
+
+        def combine(x, y):
+            a1, b1 = x
+            a2, b2 = y
+            return a1 * a2, b1 * a2 + b2
+
+        aa, bb = jax.lax.associative_scan(combine, (da_c, dbu_c), axis=0)
+        h = aa * h0[None] + bb  # (chunk, b, di, st)
+        return h[-1], h
+
+    da_t = jnp.moveaxis(da, 1, 0).reshape(nchunks, chunk, b, di, st)
+    dbu_t = jnp.moveaxis(dbu, 1, 0).reshape(nchunks, chunk, b, di, st)
+    last, hs = jax.lax.scan(chunk_step, init_state, (da_t, dbu_t))
+    hs = jnp.moveaxis(hs.reshape(s, b, di, st), 0, 1)  # (b, s, di, st)
+    y = jnp.einsum("bsdn,bsn->bsd", hs, C) + u * D[None, None]
+    return y, last
+
+
+def mamba_apply(params, cfg: ModelConfig, x: jnp.ndarray, *,
+                cache: Optional[dict] = None,
+                cache_pos: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    b, s, d = x.shape
+    di, st = cfg.d_inner, cfg.mamba.d_state
+    dc, dr = cfg.mamba.d_conv, cfg.dt_rank
+
+    zu = jnp.einsum("bsd,dgi->bsgi", x, params["in_proj"])
+    u, z = zu[:, :, 0, :], zu[:, :, 1, :]  # (b, s, di)
+    u, z = constrain(u, "btf"), constrain(z, "btf")
+
+    if cache is not None and s == 1:
+        # ---- decode: O(1) state update
+        conv_state = cache["conv"]  # (b, dc-1, di)
+        window = jnp.concatenate([conv_state, u], axis=1)  # (b, dc, di)
+        uc = jnp.einsum("bkd,kd->bd", window, params["conv_w"]) + params["conv_b"]
+        uc = jax.nn.silu(uc)[:, None]  # (b, 1, di)
+        new_conv = window[:, 1:]
+        xdbc = jnp.einsum("bsi,ij->bsj", uc, params["x_proj"])
+        dt_r, B, C = jnp.split(xdbc, [dr, dr + st], axis=-1)
+        delta = jax.nn.softplus(
+            jnp.einsum("bsr,ri->bsi", dt_r, params["dt_proj_w"])
+            + params["dt_proj_b"])
+        A = params["A_log"]
+        da = jnp.exp(delta[..., None] * (-jnp.exp(A))[None, None])[:, 0]  # (b, di, st)
+        dbu = ((delta * uc)[..., None] * B[:, :, None, :])[:, 0]
+        h = cache["ssm"] * da.astype(jnp.float32) + dbu.astype(jnp.float32)
+        y = (jnp.einsum("bdn,bn->bd", h, C[:, 0].astype(jnp.float32))
+             + uc[:, 0].astype(jnp.float32) * params["D"][None])
+        y = y[:, None].astype(x.dtype)
+        new_cache = dict(cache)
+        new_cache.update(conv=new_conv.astype(cache["conv"].dtype), ssm=h)
+    else:
+        # ---- train/prefill: causal depthwise conv + chunked scan
+        upad = jnp.pad(u, ((0, 0), (dc - 1, 0), (0, 0)))
+        uc = jax.lax.conv_general_dilated(
+            upad.astype(jnp.float32),
+            params["conv_w"].astype(jnp.float32)[:, None, :],  # (k, 1, di)
+            window_strides=(1,), padding="VALID",
+            dimension_numbers=("NWC", "WIO", "NWC"),
+            feature_group_count=di) + params["conv_b"].astype(jnp.float32)
+        uc = jax.nn.silu(uc).astype(x.dtype)
+        xdbc = jnp.einsum("bsi,ij->bsj", uc, params["x_proj"])
+        dt_r, B, C = jnp.split(xdbc, [dr, dr + st], axis=-1)
+        delta = jax.nn.softplus(
+            jnp.einsum("bsr,ri->bsi", dt_r, params["dt_proj_w"]).astype(jnp.float32)
+            + params["dt_proj_b"].astype(jnp.float32))
+        init_state = (cache["ssm"] if cache is not None
+                      else jnp.zeros((b, di, st), jnp.float32))
+        y, last = _ssm_chunked(
+            uc.astype(jnp.float32), delta,
+            B.astype(jnp.float32), C.astype(jnp.float32),
+            params["A_log"], params["D"], init_state)
+        y = y.astype(x.dtype)
+        if cache is not None:
+            # the conv window holds *raw* (pre-conv) activations
+            new_cache = dict(cache)
+            new_cache.update(conv=u[:, s - (dc - 1):, :] if s >= dc - 1
+                             else cache["conv"], ssm=last)
+        else:
+            new_cache = None
+
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bsi,id->bsd", y, params["out_proj"]).astype(x.dtype)
+    return out, new_cache
+
+
+def make_mamba_cache(cfg: ModelConfig, batch: int, dtype=None) -> dict:
+    dt = dtype or cfg.jnp_dtype
+    return {
+        "conv": jnp.zeros((batch, cfg.mamba.d_conv - 1, cfg.d_inner), dt),
+        "ssm": jnp.zeros((batch, cfg.d_inner, cfg.mamba.d_state), jnp.float32),
+    }

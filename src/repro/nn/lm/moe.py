@@ -1,0 +1,159 @@
+"""Mixture-of-Experts FFN: sort-based dispatch + batched expert GEMMs.
+
+This is the paper-technique crossover point (DESIGN.md §4): expert compute is
+the *grouped matmul* of PyG's heterogeneous projections (C4) and token
+dispatch is the *sort + segment* machinery of accelerated message passing
+(C2) — tokens scatter to experts exactly as messages scatter to destination
+nodes, with the paper's sort-order insight providing contiguity.
+
+Dispatch (per jit-global batch):
+  1. router logits -> top-k (gates, expert ids)
+  2. flatten to (T*k) assignments, sort by expert id (stable)
+  3. position-in-expert via exclusive-cumsum offsets; drop beyond capacity C
+  4. scatter tokens into an (E, C, d) buffer     [GSPMD: all-to-all when the
+     token axis is data-sharded and E is model-sharded]
+  5. batched expert GLU-FFN: (E,C,d) x (E,d,2,f) -> (E,C,d)   [MXU-dense]
+  6. gather back, weight by gates, sum over k
+
+Variants: DeepSeekMoE shared experts (always-on), Arctic dense residual.
+Aux output: switch-style load-balance loss.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.nn.lm.config import ModelConfig, MoEConfig
+from repro.nn.lm.ffn import _ACTS, ffn_apply, init_ffn
+from repro.nn.module import normal_init
+
+
+def init_moe(key, cfg: ModelConfig):
+    m = cfg.moe
+    d, dt = cfg.d_model, cfg.jnp_dtype
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": normal_init(ks[0], (d, m.num_experts), jnp.float32, d ** -0.5),
+        "w_in": normal_init(ks[1], (m.num_experts, d, 2, m.d_expert), dt,
+                            d ** -0.5),
+        "w_out": normal_init(ks[2], (m.num_experts, m.d_expert, d), dt,
+                             m.d_expert ** -0.5),
+    }
+    if m.num_shared:
+        p["shared"] = init_ffn(ks[3], cfg, d_ff=m.num_shared * m.d_expert)
+    if m.dense_residual:
+        p["dense"] = init_ffn(ks[4], cfg, d_ff=cfg.d_ff)
+    return p
+
+
+def _capacity(tokens: int, m: MoEConfig) -> int:
+    c = int(tokens * m.top_k / m.num_experts * m.capacity_factor)
+    # MXU-align large (training/prefill) capacities; decode-sized batches
+    # use 8-row sublane alignment instead — the 128 floor was wasting up to
+    # 16x expert FLOPs at decode (§Roofline: MoE decode useful_ratio 0.06)
+    if tokens >= 16_384:
+        return max(((c + 127) // 128) * 128, 128)
+    return max(((c + 7) // 8) * 8, 8)
+
+
+# Dispatch implementation, switchable at trace time (§Perf iteration knob):
+# 'scatter' — buf.at[slot].add / out.at[token].add (baseline)
+# 'gather'  — argsort-inverse index tables; both directions become gathers,
+#             which GSPMD reshards with all-to-all instead of replicating
+#             scatter operands.
+_MOE_IMPL = "scatter"
+
+
+def set_moe_impl(impl: str):
+    global _MOE_IMPL
+    assert impl in ("scatter", "gather")
+    _MOE_IMPL = impl
+
+
+def moe_apply(params, cfg: ModelConfig, x: jnp.ndarray
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (out, aux_loss)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    e, k = m.num_experts, m.top_k
+    xf = x.reshape(t, d)
+
+    logits = constrain(xf.astype(jnp.float32) @ params["router"], "te")
+    probs = constrain(jax.nn.softmax(logits, axis=-1), "te")
+    gates, ids = jax.lax.top_k(probs, k)  # (T, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # --- sort-based dispatch (C2 machinery)
+    flat_ids = ids.reshape(-1)                      # (T*k,)
+    flat_gates = gates.reshape(-1)
+    order = jnp.argsort(flat_ids, stable=True)      # sort by expert
+    sorted_experts = flat_ids[order]
+    token_of = order // k                           # source token per slot
+    # scatter-free per-expert histogram: binary search over the sorted ids
+    # (§Perf: the .at[].add scatter forced a replicated all-reduce per layer)
+    starts = jnp.searchsorted(sorted_experts,
+                              jnp.arange(e + 1, dtype=flat_ids.dtype),
+                              side="left").astype(jnp.int32)
+    counts = starts[1:] - starts[:-1]
+    offsets = starts[:-1]                           # exclusive cumsum
+
+    # --- load-balance aux (Switch): E * sum_e f_e * p_e
+    me = probs.mean(0)
+    ce = counts.astype(jnp.float32) / (t * k)
+    aux = e * jnp.sum(me * ce)
+    pos_in_e = jnp.arange(t * k, dtype=jnp.int32) - offsets[sorted_experts]
+    cap = _capacity(t, m)
+    keep = pos_in_e < cap
+    slot = sorted_experts * cap + jnp.where(keep, pos_in_e, 0)
+
+    if _MOE_IMPL == "gather":
+        # slot -> assignment table built arithmetically (scatter-free):
+        # slot (e_i, c) holds the assignment at sorted position
+        # offsets[e_i] + c, valid iff c < counts[e_i]. All data movement is
+        # gathers, which GSPMD reshards with all-to-alls instead of the
+        # replicated-scatter fallback.
+        e_idx = jnp.arange(e * cap, dtype=jnp.int32) // cap
+        c_idx = jnp.arange(e * cap, dtype=jnp.int32) % cap
+        sorted_pos = offsets[e_idx] + c_idx
+        slot_valid = (c_idx < counts[e_idx]) & (sorted_pos < t * k)
+        assignment = jnp.take(order, jnp.minimum(sorted_pos, t * k - 1))
+        buf = jnp.where(
+            slot_valid[:, None],
+            jnp.take(xf, assignment // k, axis=0), 0).astype(x.dtype)
+    else:
+        buf = jnp.zeros((e * cap, d), x.dtype)
+        buf = buf.at[slot].add(
+            jnp.where(keep[:, None], xf[token_of], 0).astype(x.dtype))
+    buf = constrain(buf.reshape(e, cap, d), "ecd")
+
+    # --- batched expert GLU (grouped matmul, MXU-dense per expert)
+    act = _ACTS[cfg.act]
+    gu = jnp.einsum("ecd,edgf->ecgf", buf, params["w_in"])
+    h = act(gu[:, :, 0, :]) * gu[:, :, 1, :]
+    out_e = constrain(
+        jnp.einsum("ecf,efd->ecd", h, params["w_out"]), "ecd"
+    ).reshape(e * cap, d)
+
+    if _MOE_IMPL == "gather":
+        # combine: token t's k expert outputs live at slots slot[inv[t,k]]
+        inv = jnp.argsort(order, stable=True)       # (T*k,) assignment->sorted
+        tok_slots = slot[inv].reshape(t, k)
+        tok_keep = keep[inv].reshape(t, k)
+        picked = jnp.take(out_e, tok_slots.reshape(-1), axis=0).reshape(
+            t, k, d)
+        y = (picked * (gates * tok_keep).astype(x.dtype)[..., None]).sum(1)
+    else:
+        back = out_e[slot] * (flat_gates[order] * keep)[:, None].astype(
+            x.dtype)
+        y = jnp.zeros((t, d), x.dtype).at[token_of].add(back)
+
+    if "shared" in params:
+        y = y + ffn_apply(params["shared"], cfg, xf)
+    if "dense" in params:
+        y = y + ffn_apply(params["dense"], cfg, xf)
+    return y.reshape(b, s, d), aux

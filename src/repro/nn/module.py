@@ -1,0 +1,51 @@
+"""Minimal pure-functional module system (no flax on this box).
+
+Modules are *stateless descriptors*: ``init(key) -> params`` builds a param
+pytree, ``apply(params, ...)`` is a pure function. This keeps every training
+/serving step a closed jit-able function of ``(params, batch)`` — the JAX
+rendition of PyG's tensor-centric API ("exclusively operates on tensor-like
+data").
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+class Module:
+    """Base class: subclasses define ``init`` and ``apply``."""
+
+    def init(self, key: jax.Array) -> Params:
+        return {}
+
+    def apply(self, params: Params, *args, **kwargs):
+        raise NotImplementedError
+
+    def __call__(self, params: Params, *args, **kwargs):
+        return self.apply(params, *args, **kwargs)
+
+
+def split_keys(key: jax.Array, names: Sequence[str]) -> Dict[str, jax.Array]:
+    keys = jax.random.split(key, len(names))
+    return dict(zip(names, keys))
+
+
+# --------------------------------------------------------------------- inits
+def lecun_normal(key, shape, dtype=jnp.float32, in_axis: int = 0):
+    fan_in = shape[in_axis]
+    return jax.random.normal(key, shape, dtype) * (1.0 / fan_in) ** 0.5
+
+
+def glorot_uniform(key, shape, dtype=jnp.float32):
+    fan_in, fan_out = shape[0], shape[-1]
+    lim = (6.0 / (fan_in + fan_out)) ** 0.5
+    return jax.random.uniform(key, shape, dtype, -lim, lim)
+
+
+def normal_init(key, shape, dtype=jnp.float32, stddev=0.02):
+    return jax.random.normal(key, shape, dtype) * stddev

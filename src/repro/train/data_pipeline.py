@@ -1,0 +1,60 @@
+"""Synthetic token pipeline for LM training drivers (infinite iterator).
+
+Deterministic per-step batches (seeded), host-side generation double-
+buffered so the accelerator never waits on the RNG.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn.lm.config import ModelConfig
+
+
+def synthetic_batches(cfg: ModelConfig, batch: int, seq: int, *,
+                      seed: int = 0, enc_len: int = 0,
+                      prefetch: int = 2) -> Iterator[Dict]:
+    """Markov-ish synthetic tokens (learnable structure, not pure noise)."""
+    rng = np.random.default_rng(seed)
+
+    def make(i):
+        # successor sequences with 5% noise tokens: next-token is learnable
+        # from the bigram table alone (CE floor ~ 0.05 * ln V), so smoke
+        # trainings show a clear loss drop within tens of steps
+        first = rng.integers(0, cfg.vocab_size, (batch, 1))
+        toks = (first + np.arange(seq)[None, :]) % cfg.vocab_size
+        noise_mask = rng.random((batch, seq)) < 0.05
+        toks = np.where(noise_mask,
+                        rng.integers(0, cfg.vocab_size, (batch, seq)), toks)
+        out = {"tokens": jnp.asarray(toks, jnp.int32)}
+        if cfg.n_prefix_embeds:
+            out["prefix_embeds"] = jnp.asarray(rng.standard_normal(
+                (batch, cfg.n_prefix_embeds, cfg.d_model)), cfg.jnp_dtype)
+        if cfg.arch_type == "encdec":
+            out["enc_in"] = jnp.asarray(rng.standard_normal(
+                (batch, enc_len or seq, cfg.d_model)), cfg.jnp_dtype)
+        return out
+
+    if prefetch <= 0:
+        i = 0
+        while True:
+            yield make(i)
+            i += 1
+        return
+
+    q: "queue.Queue" = queue.Queue(maxsize=prefetch)
+
+    def producer():
+        i = 0
+        while True:
+            q.put(make(i))
+            i += 1
+
+    threading.Thread(target=producer, daemon=True).start()
+    while True:
+        yield q.get()

@@ -1,0 +1,73 @@
+"""jit-able step functions: train / prefill / decode, per architecture."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.lm import model as model_lib
+from repro.nn.lm.config import ModelConfig
+from repro.train import optimizer as opt_lib
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: opt_lib.OptConfig,
+                    remat=True):
+    """(state, batch) -> (state, metrics). Closed over static configs."""
+
+    def train_step(state: opt_lib.TrainState, batch: Dict[str, jnp.ndarray]):
+        def loss(params):
+            return model_lib.loss_fn(params, cfg, batch, remat=remat)
+
+        (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(
+            state.params)
+        new_state, opt_metrics = opt_lib.apply_updates(state, grads, opt_cfg)
+        out = {"loss": l, **metrics, **opt_metrics}
+        return new_state, out
+
+    return train_step
+
+
+def make_train_step_compressed(cfg: ModelConfig,
+                               opt_cfg: opt_lib.OptConfig):
+    """Train step with error-feedback int8 gradient compression.
+
+    The quantise/dequantise pair models the pod-boundary (DCN) gradient
+    exchange: on real hardware the int8 payload is what crosses the slow
+    link (4x traffic cut vs fp32); the error-feedback residual carries the
+    rounding error to the next step so long-run updates stay unbiased.
+    Signature: (state, batch, residual) -> (state, metrics, residual).
+    """
+    from repro.distributed import compression as comp_lib
+
+    def train_step(state, batch, residual):
+        def loss(params):
+            return model_lib.loss_fn(params, cfg, batch)
+
+        (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(
+            state.params)
+        payload, new_residual = comp_lib.compress_grads(grads, residual)
+        grads = comp_lib.decompress_grads(payload, grads)
+        new_state, opt_metrics = opt_lib.apply_updates(state, grads, opt_cfg)
+        return new_state, {"loss": l, **metrics, **opt_metrics}, new_residual
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch, cache):
+        return model_lib.prefill(
+            params, cfg, batch["tokens"], cache,
+            prefix_embeds=batch.get("prefix_embeds"),
+            enc_in=batch.get("enc_in"))
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, token, cache, pos):
+        return model_lib.decode_step(params, cfg, token, cache, pos)
+
+    return decode_step

@@ -1,0 +1,133 @@
+"""jaxpr FLOP counter + HLO collective parser (roofline instrumentation)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import hlo_analysis, jaxpr_stats
+
+
+def test_dot_flops_exact():
+    def f(a, b):
+        return a @ b
+
+    a = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    b = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    stats = jaxpr_stats.step_stats(f, a, b)
+    assert stats["dot_flops"] == 2 * 32 * 64 * 128
+
+
+def test_scan_multiplies_trip_count():
+    def f(x):
+        def body(c, _):
+            return c @ c, None
+
+        out, _ = jax.lax.scan(body, x, None, length=7)
+        return out
+
+    x = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    stats = jaxpr_stats.step_stats(f, x)
+    assert stats["dot_flops"] == 7 * 2 * 16 * 16 * 16
+
+
+def test_nested_scan_and_remat():
+    def inner(x):
+        def body(c, _):
+            return c @ c, None
+
+        return jax.lax.scan(body, x, None, length=3)[0]
+
+    def f(x):
+        def body(c, _):
+            return jax.checkpoint(inner)(c), None
+
+        return jax.lax.scan(body, x, None, length=5)[0]
+
+    x = jax.ShapeDtypeStruct((8, 8), jnp.float32)
+    stats = jaxpr_stats.step_stats(f, x)
+    assert stats["dot_flops"] == 5 * 3 * 2 * 8 * 8 * 8
+
+
+def test_grad_counts_fwd_and_bwd():
+    def f(w, x):
+        return ((x @ w) ** 2).sum()
+
+    w = jax.ShapeDtypeStruct((16, 24), jnp.float32)
+    x = jax.ShapeDtypeStruct((8, 16), jnp.float32)
+    fwd = jaxpr_stats.step_stats(f, w, x)["dot_flops"]
+    both = jaxpr_stats.step_stats(jax.grad(f, argnums=(0, 1)), w, x)[
+        "dot_flops"]
+    assert both >= 2.9 * fwd  # fwd + dW + dX matmuls
+
+
+def test_batched_dot_general():
+    def f(a, b):
+        return jnp.einsum("bik,bkj->bij", a, b)
+
+    a = jax.ShapeDtypeStruct((4, 8, 16), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 16, 32), jnp.float32)
+    stats = jaxpr_stats.step_stats(f, a, b)
+    assert stats["dot_flops"] == 4 * 2 * 8 * 16 * 32
+
+
+SAMPLE_HLO = """
+HloModule test
+
+%cond (p: (s32[], f32[8])) -> pred[] {
+  %p = (s32[], f32[8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%body (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %p = (s32[], f32[8]) parameter(0)
+  %x = f32[8] get-tuple-element(%p), index=1
+  %ar = f32[8]{0} all-reduce(f32[8]{0} %x), replica_groups={}
+  %i = s32[] get-tuple-element(%p), index=0
+  ROOT %t = (s32[], f32[8]) tuple(%i, %ar)
+}
+
+ENTRY %main (a: f32[128,64]) -> f32[128,64] {
+  %a = f32[128,64] parameter(0)
+  %ag = f32[128,64]{1,0} all-gather(f32[128,16]{1,0} %a), dimensions={1}
+  %init = (s32[], f32[8]) tuple(s32[] constant(0), f32[8] constant(0))
+  %w = (s32[], f32[8]) while(%init), condition=%cond, body=%body
+  ROOT %r = f32[128,64] copy(%ag)
+}
+"""
+
+
+def test_hlo_collectives_with_trip_counts():
+    stats = hlo_analysis.collective_stats(SAMPLE_HLO)
+    # all-gather in entry: once, operand f32[128,16] = 8192 B
+    assert stats["all-gather"]["count"] == 1
+    assert stats["all-gather"]["bytes"] == 128 * 16 * 4
+    # all-reduce inside the while body: 12 executions x 32 B
+    assert stats["all-reduce"]["count"] == 12
+    assert stats["all-reduce"]["bytes"] == 12 * 8 * 4
+
+
+def test_sharding_specs_divisible_for_all_archs():
+    """Every param spec must divide evenly on the production meshes."""
+    from jax.sharding import AbstractMesh
+    from repro.configs import ARCH_IDS, get_config
+    from repro.distributed import sharding as shard_lib
+    from repro.launch import specs as specs_lib
+
+    for mesh_shape, axes in (((16, 16), ("data", "model")),
+                             ((2, 16, 16), ("pod", "data", "model"))):
+        mesh = AbstractMesh(mesh_shape, axes)
+        for arch in ARCH_IDS:
+            cfg = get_config(arch)
+            params = specs_lib.abstract_params(cfg)
+            for profile in ("2d", "fsdp"):
+                flat = jax.tree_util.tree_flatten_with_path(params)[0]
+                for path, leaf in flat:
+                    spec = shard_lib.param_spec(path, leaf, mesh, profile)
+                    for dim, ax in enumerate(spec):
+                        if ax is None:
+                            continue
+                        n = shard_lib._axis_size(mesh, ax)
+                        assert leaf.shape[dim] % n == 0, (
+                            arch, profile, path, leaf.shape, spec)

@@ -1,0 +1,144 @@
+"""Per-architecture smoke tests (deliverable f): reduced same-family configs,
+one forward/train step on CPU, output shapes + no NaNs; plus the
+prefill==forward and decode==forward consistency checks on representative
+families (dense / GQA / MoE / SSM / hybrid / enc-dec / VLM).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.nn.lm import model as M
+from repro.train import optimizer as opt_lib, steps as steps_lib
+
+
+def _batch(cfg, rng, b=2, s=16):
+    out = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)))}
+    if cfg.n_prefix_embeds:
+        out["prefix_embeds"] = jnp.asarray(
+            rng.standard_normal((b, cfg.n_prefix_embeds, cfg.d_model)),
+            cfg.jnp_dtype)
+    if cfg.arch_type == "encdec":
+        out["enc_in"] = jnp.asarray(rng.standard_normal((b, 8, cfg.d_model)),
+                                    cfg.jnp_dtype)
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch, rng):
+    cfg = get_config(arch, smoke=True)
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg, rng)
+    logits, aux = M.forward_train(
+        params, cfg, batch["tokens"],
+        prefix_embeds=batch.get("prefix_embeds"),
+        enc_in=batch.get("enc_in"))
+    assert logits.shape == (2, 16, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    # one full train step (grads + optimizer)
+    ocfg = opt_lib.OptConfig(lr=1e-3, warmup_steps=1, total_steps=10)
+    state = opt_lib.init_state(params, ocfg)
+    step = steps_lib.make_train_step(cfg, ocfg)
+    new_state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(new_state.step) == 1
+    # params actually changed
+    delta = sum(float(jnp.abs(a - b).sum()) for a, b in zip(
+        jax.tree_util.tree_leaves(state.params),
+        jax.tree_util.tree_leaves(new_state.params)))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_count_analytic_matches_actual(arch):
+    cfg = get_config(arch, smoke=True)
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    actual = sum(l.size for l in jax.tree_util.tree_leaves(params))
+    assert actual == cfg.param_count(), (actual, cfg.param_count())
+
+
+@pytest.mark.parametrize("arch", ["qwen3_14b", "gemma_2b", "falcon_mamba_7b",
+                                  "jamba_1_5_large_398b",
+                                  "deepseek_moe_16b",
+                                  "seamless_m4t_large_v2", "internvl2_76b"])
+def test_prefill_then_decode_matches_forward(arch, rng):
+    """Strong consistency: teacher-forced logits at position t must equal
+    prefill(t tokens) / decode-by-decode logits (KV/SSM cache correctness)."""
+    cfg = get_config(arch, smoke=True)
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    b, s = 1, 12
+    batch = _batch(cfg, rng, b=b, s=s)
+    toks = batch["tokens"]
+    full_logits, _ = M.forward_train(
+        params, cfg, toks, prefix_embeds=batch.get("prefix_embeds"),
+        enc_in=batch.get("enc_in"), remat=False)
+
+    prefix = cfg.n_prefix_embeds
+    total = s + prefix
+    cache = M.make_cache(cfg, b, total, enc_len=8)
+    # prefill on the first s-2 tokens, then decode 2 tokens
+    cut = s - 2
+    pre_logits, cache = M.prefill(
+        params, cfg, toks[:, :cut], cache_slice(cache, cut + prefix),
+        prefix_embeds=batch.get("prefix_embeds"),
+        enc_in=batch.get("enc_in"))
+    np.testing.assert_allclose(
+        np.asarray(pre_logits[:, -1], np.float32),
+        np.asarray(full_logits[:, cut - 1], np.float32),
+        rtol=2e-3, atol=2e-3)
+    # grow the cache to full length for decode
+    cache = pad_cache(cfg, cache, b, total, enc_len=8)
+    pos = cut + prefix
+    for t in range(cut, s):
+        logits_d, cache = M.decode_step(
+            params, cfg, toks[:, t:t + 1], cache, jnp.asarray(pos, jnp.int32))
+        np.testing.assert_allclose(
+            np.asarray(logits_d[:, 0], np.float32),
+            np.asarray(full_logits[:, t], np.float32),
+            rtol=2e-3, atol=2e-3)
+        pos += 1
+
+
+def cache_slice(cache, length):
+    """Shrink KV time axes to `length` for a short prefill."""
+
+    def f(path, a):
+        names = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+        if names[-1] in ("k", "v") and "cross" not in names:
+            return a[..., :length, :, :] if a.ndim == 4 else \
+                a[:, :, :length, :, :]
+        return a
+
+    return jax.tree_util.tree_map_with_path(f, cache)
+
+
+def pad_cache(cfg, cache, b, total, enc_len):
+    def f(path, a):
+        names = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+        if names[-1] in ("k", "v") and "cross" not in names:
+            time_ax = a.ndim - 3
+            pad = total - a.shape[time_ax]
+            if pad > 0:
+                width = [(0, 0)] * a.ndim
+                width[time_ax] = (0, pad)
+                return jnp.pad(a, width)
+        return a
+
+    return jax.tree_util.tree_map_with_path(f, cache)
+
+
+def test_decode_32k_shape_contract():
+    """decode lowers serve_step (one token vs seq_len cache), not train."""
+    cfg = get_config("qwen3_4b", smoke=True)
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    cache = M.make_cache(cfg, 2, 64)
+    logits, new_cache = M.decode_step(
+        params, cfg, jnp.zeros((2, 1), jnp.int32), cache,
+        jnp.asarray(5, jnp.int32))
+    assert logits.shape == (2, 1, cfg.vocab_size)
+    # cache shapes preserved
+    for a, b in zip(jax.tree_util.tree_leaves(cache),
+                    jax.tree_util.tree_leaves(new_cache)):
+        assert a.shape == b.shape

@@ -1,0 +1,184 @@
+"""Fault tolerance + elastic + compression + optimizer (deliverables: FT).
+
+Checkpoint/restart is exercised exactly the way production uses it:
+train N steps with a checkpoint cadence, kill the loop mid-run (simulated
+failure), restart from disk, and assert the resumed run matches an
+uninterrupted one bit-for-bit.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.distributed import checkpoint as ckpt
+from repro.distributed import compression as comp
+from repro.distributed.elastic import StragglerMonitor
+from repro.nn.lm import model as M
+from repro.train import data_pipeline, optimizer as opt_lib, steps
+from repro.train.loop import SimulatedFailure, train_loop
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("qwen3_4b", smoke=True)
+    ocfg = opt_lib.OptConfig(lr=1e-3, warmup_steps=2, total_steps=40)
+    params = M.init_model(jax.random.PRNGKey(0), cfg)
+    state = opt_lib.init_state(params, ocfg)
+    step = jax.jit(steps.make_train_step(cfg, ocfg))
+    return cfg, ocfg, state, step
+
+
+def _batches(cfg, seed=0):
+    return data_pipeline.synthetic_batches(cfg, 2, 16, seed=seed,
+                                           prefetch=0)
+
+
+def test_checkpoint_roundtrip(tmp_path, setup):
+    cfg, ocfg, state, step = setup
+    ckpt.save_checkpoint(tmp_path, 7, state)
+    assert ckpt.latest_step(tmp_path) == 7
+    restored = ckpt.restore_checkpoint(tmp_path, 7, state)
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_retention_keeps_last_k(tmp_path, setup):
+    cfg, ocfg, state, step = setup
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save_checkpoint(tmp_path, s, state, keep=2)
+    assert ckpt.all_steps(tmp_path) == [4, 5]
+
+
+def test_failure_resume_bit_exact(tmp_path, setup):
+    """Uninterrupted vs killed-and-resumed runs must converge identically."""
+    cfg, ocfg, state, step = setup
+    # uninterrupted 12 steps (fresh deterministic batches)
+    out_a = train_loop(state, step, _batches(cfg), num_steps=12,
+                       log_fn=lambda *a: None)
+    # interrupted at step 8 with checkpoints every 4
+    with pytest.raises(SimulatedFailure):
+        train_loop(state, step, _batches(cfg), num_steps=12,
+                   ckpt_dir=tmp_path / "ft", ckpt_every=4, fail_at=8,
+                   log_fn=lambda *a: None)
+    assert ckpt.latest_step(tmp_path / "ft") == 8
+    # resume: the loop must restart from step 8 and replay 9..12.
+    # deterministic pipeline: skip the first 8 batches on restart
+    it = _batches(cfg)
+    for _ in range(8):
+        next(it)
+    out_b = train_loop(state, step, it, num_steps=12,
+                       ckpt_dir=tmp_path / "ft", ckpt_every=4,
+                       log_fn=lambda *a: None)
+    np.testing.assert_allclose(out_a["history"][-1][1],
+                               out_b["history"][-1][1], rtol=1e-6)
+    for a, b in zip(jax.tree_util.tree_leaves(out_a["state"].params),
+                    jax.tree_util.tree_leaves(out_b["state"].params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_checkpoint(tmp_path, setup):
+    cfg, ocfg, state, step = setup
+    th = ckpt.save_checkpoint(tmp_path / "async", 3, state,
+                              async_write=True)
+    th.join()
+    assert ckpt.latest_step(tmp_path / "async") == 3
+
+
+def test_elastic_reshard_different_mesh(tmp_path, setup):
+    """Save, then restore with a (different) mesh's shardings — the elastic
+    restart path. On 1 device the mesh is trivial but the device_put +
+    NamedSharding machinery is fully exercised."""
+    from repro.distributed import sharding as shard_lib
+    from repro.launch.mesh import make_local_mesh
+    cfg, ocfg, state, step = setup
+    ckpt.save_checkpoint(tmp_path / "el", 5, state)
+    mesh = make_local_mesh(1, 1)
+    shardings = shard_lib.state_shardings(mesh, state)
+    restored = ckpt.restore_checkpoint(tmp_path / "el", 5, state,
+                                       mesh=mesh, shardings=shardings)
+    for a, b in zip(jax.tree_util.tree_leaves(state.params),
+                    jax.tree_util.tree_leaves(restored.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_straggler_monitor_detects_slow_host():
+    mon = StragglerMonitor(num_hosts=4, min_steps=3)
+    for _ in range(5):
+        for h in range(4):
+            mon.record(h, 1.0 if h != 2 else 2.1)
+    m = mon.check()
+    assert m.kind == "rebalance" and m.host == 2
+    shares = mon.rebalanced_shares()
+    assert shares[2] < shares[0]
+    # evict threshold (needs >2 hosts for a meaningful median)
+    mon2 = StragglerMonitor(num_hosts=4, min_steps=1)
+    for _ in range(3):
+        for h in range(3):
+            mon2.record(h, 1.0)
+        mon2.record(3, 10.0)
+    assert mon2.check().kind == "evict"
+
+
+def test_int8_compression_roundtrip(rng):
+    tree = {"a": jnp.asarray(rng.standard_normal((32, 16)).astype(
+        np.float32)), "b": jnp.asarray(rng.standard_normal(7).astype(
+            np.float32))}
+    res = comp.init_residual(tree)
+    payload, new_res = comp.compress_grads(tree, res)
+    deq = comp.decompress_grads(payload, tree)
+    for k in tree:
+        err = np.abs(np.asarray(deq[k]) - np.asarray(tree[k])).max()
+        scale = float(np.abs(np.asarray(tree[k])).max()) / 127
+        assert err <= scale * 0.5001 + 1e-7
+        # residual carries exactly the quantisation error
+        np.testing.assert_allclose(np.asarray(new_res[k]),
+                                   np.asarray(tree[k] - deq[k]), rtol=1e-5,
+                                   atol=1e-7)
+
+
+def test_compressed_training_tracks_uncompressed(setup):
+    """EF-int8 compressed grads must reach a similar loss (error feedback)."""
+    cfg, ocfg, state, step = setup
+    step_c = jax.jit(steps.make_train_step_compressed(cfg, ocfg))
+    residual = comp.init_residual(state.params)
+    s_a, s_b = state, state
+    it_a, it_b = _batches(cfg), _batches(cfg)
+    for _ in range(15):
+        s_a, m_a = step(s_a, next(it_a))
+        s_b, m_b, residual = step_c(s_b, next(it_b), residual)
+    assert abs(float(m_a["loss"]) - float(m_b["loss"])) < 0.15 * max(
+        float(m_a["loss"]), 1.0)
+
+
+def test_optimizer_descends_and_clips():
+    ocfg = opt_lib.OptConfig(lr=0.1, warmup_steps=0, total_steps=100,
+                             grad_clip=1.0, weight_decay=0.0)
+    params = {"w": jnp.asarray([10.0, -10.0])}
+    state = opt_lib.init_state(params, ocfg)
+
+    def loss(p):
+        return (p["w"] ** 2).sum()
+
+    for _ in range(50):
+        g = jax.grad(loss)(state.params)
+        state, metrics = opt_lib.apply_updates(state, g, ocfg)
+    # grad-clip 1.0 bounds per-step movement to ~lr; expect steady descent
+    assert float(loss(state.params)) < float(loss(params)) * 0.5
+    # clipping: huge grads produce bounded update
+    big = {"w": jnp.asarray([1e9, 1e9])}
+    st2 = opt_lib.init_state(big, ocfg)
+    g = {"w": jnp.asarray([1e9, -1e9])}
+    st2b, m = opt_lib.apply_updates(st2, g, ocfg)
+    assert float(jnp.abs(st2b.params["w"] - big["w"]).max()) < 1.0
+
+
+def test_lr_schedule_shape():
+    ocfg = opt_lib.OptConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    lrs = [float(opt_lib.lr_schedule(ocfg, jnp.asarray(s)))
+           for s in range(0, 101, 10)]
+    assert lrs[0] < lrs[1]                     # warmup rises
+    assert lrs[-1] < lrs[2]                    # cosine decays
+    assert lrs[-1] >= 0.099                    # floor at 10% of peak

@@ -1,0 +1,97 @@
+"""MessagePassing (paper C2): path equivalence, flows, explainer callback."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.edge_index import EdgeIndex
+from repro.core.message_passing import MessagePassing
+
+
+class PlainSum(MessagePassing):
+    pass  # default message + sum -> eligible for the fused SpMM path
+
+
+class CustomMsg(MessagePassing):
+    def message(self, params, x_j, x_i, edge_attr):
+        return x_j * 2.0 + (0.0 if x_i is None else x_i * 0.5)
+
+
+def test_fused_equals_materialized(rng):
+    """The metadata-driven fast path must agree with edge materialisation."""
+    n, e, f = 40, 150, 8
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    x = jnp.asarray(rng.standard_normal((n, f)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal(e).astype(np.float32))
+    ei = EdgeIndex.from_coo(src, dst, n, n).fill_cache()
+    mp = PlainSum(aggr="sum")
+    fused = mp.propagate({}, ei, x, edge_weight=w)
+    # force materialised path via raw array edge_index
+    raw = mp.propagate({}, ei.data, x, edge_weight=w, num_nodes=n)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(raw),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_mean_fused_path(rng):
+    n, e, f = 30, 100, 4
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    x = jnp.asarray(rng.standard_normal((n, f)).astype(np.float32))
+    ei = EdgeIndex.from_coo(src, dst, n, n)
+    mp = PlainSum(aggr="mean")
+    out = mp.propagate({}, ei, x)
+    ref = np.zeros((n, f), np.float32)
+    cnt = np.zeros(n)
+    for s, d in zip(src, dst):
+        ref[d] += np.asarray(x)[s]
+        cnt[d] += 1
+    ref /= np.maximum(cnt, 1)[:, None]
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-4, atol=1e-4)
+
+
+def test_flow_target_to_source(rng):
+    n, e, f = 20, 60, 4
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    x = jnp.asarray(rng.standard_normal((n, f)).astype(np.float32))
+    ei = EdgeIndex.from_coo(src, dst, n, n)
+    rev = MessagePassing(aggr="sum", flow="target_to_source")
+    out = rev.propagate({}, ei, x, num_nodes=n)
+    ref = np.zeros((n, f), np.float32)
+    for s, d in zip(src, dst):
+        ref[s] += np.asarray(x)[d]
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-4, atol=1e-4)
+
+
+def test_message_callback_masks_edges(rng):
+    """The explainability hook c(.) must modulate messages per edge."""
+    n, e, f = 15, 40, 4
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    x = jnp.asarray(rng.standard_normal((n, f)).astype(np.float32))
+    ei = EdgeIndex.from_coo(src, dst, n, n)
+    mp = CustomMsg(aggr="sum")
+    full = mp.propagate({}, ei, x, num_nodes=n)
+    zeroed = mp.propagate({}, ei, x, num_nodes=n,
+                          message_callback=lambda m: m * 0.0)
+    assert float(jnp.abs(zeroed).sum()) == 0.0
+    half = mp.propagate({}, ei, x, num_nodes=n,
+                        message_callback=lambda m: m * 0.5)
+    np.testing.assert_allclose(np.asarray(half), np.asarray(full) * 0.5,
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_bipartite(rng):
+    ns, nd, e, f = 12, 9, 40, 4
+    src = rng.integers(0, ns, e).astype(np.int32)
+    dst = rng.integers(0, nd, e).astype(np.int32)
+    xs = jnp.asarray(rng.standard_normal((ns, f)).astype(np.float32))
+    xd = jnp.asarray(rng.standard_normal((nd, f)).astype(np.float32))
+    ei = EdgeIndex.from_coo(src, dst, ns, nd)
+    out = PlainSum(aggr="sum").propagate({}, ei, (xs, xd))
+    assert out.shape == (nd, f)
+    ref = np.zeros((nd, f), np.float32)
+    for s, d in zip(src, dst):
+        ref[d] += np.asarray(xs)[s]
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-4, atol=1e-4)

@@ -1,0 +1,170 @@
+"""Trimming (C8), heterogeneous MP (C4), explainability (C11)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.edge_index import EdgeIndex
+from repro.core.explain import Explainer
+from repro.core.hetero import GroupedLinear, HeteroConv, to_hetero
+from repro.core.trim import trim_sizes, trim_to_layer
+from repro.data.data import Data
+from repro.data.loader import NeighborLoader
+from repro.nn.gnn.conv import GATConv, SAGEConv
+from repro.nn.gnn.models import make_model
+
+
+# ------------------------------------------------------------------ trimming
+def test_trim_sizes_monotone():
+    nodes, edges = [9, 40, 80], [40, 80]
+    n0, e0 = trim_sizes(nodes, edges, 0)
+    n1, e1 = trim_sizes(nodes, edges, 1)
+    assert (n0, e0) == (129, 120)
+    assert (n1, e1) == (49, 40)
+    assert n1 < n0 and e1 < e0
+
+
+@pytest.mark.parametrize("model_name", ["gcn", "sage", "gin", "gat",
+                                        "edgecnn"])
+def test_trim_preserves_seed_outputs(rng, model_name):
+    """The paper's invariant: trimming never changes seed representations."""
+    n = 300
+    ei = np.stack([rng.integers(0, n, 1500), rng.integers(0, n, 1500)])
+    data = Data(x=rng.standard_normal((n, 16)).astype(np.float32),
+                edge_index=ei, y=rng.integers(0, 3, n))
+    loader = NeighborLoader(data, data, num_neighbors=[4, 3, 2],
+                            batch_size=6)
+    batch = next(iter(loader))
+    model = make_model(model_name, 16, 32, 4, 3)
+    params = model.init(jax.random.PRNGKey(0))
+    full = model.apply(params, batch.x, batch.edge_index.data,
+                       num_nodes=batch.num_nodes)
+    trim = model.apply(params, batch.x, batch.edge_index.data,
+                       num_sampled_nodes_per_hop=batch.num_sampled_nodes,
+                       num_sampled_edges_per_hop=batch.num_sampled_edges,
+                       trim=True)
+    np.testing.assert_allclose(
+        np.asarray(full[batch.seed_slots]),
+        np.asarray(trim[batch.seed_slots]), rtol=1e-3, atol=1e-4)
+
+
+def test_trim_reduces_flops(rng):
+    """Trimmed execution must do strictly less dot work (jaxpr-counted)."""
+    from repro.launch import jaxpr_stats
+    n = 300
+    ei = np.stack([rng.integers(0, n, 1500), rng.integers(0, n, 1500)])
+    data = Data(x=rng.standard_normal((n, 16)).astype(np.float32),
+                edge_index=ei)
+    loader = NeighborLoader(data, data, num_neighbors=[4, 3, 2],
+                            batch_size=6, labels_attr=None)
+    batch = next(iter(loader))
+    model = make_model("sage", 16, 32, 4, 3)
+    params = model.init(jax.random.PRNGKey(0))
+    f_full = jaxpr_stats.step_stats(
+        lambda p: model.apply(p, batch.x, batch.edge_index.data,
+                              num_nodes=batch.num_nodes), params)
+    f_trim = jaxpr_stats.step_stats(
+        lambda p: model.apply(
+            p, batch.x, batch.edge_index.data,
+            num_sampled_nodes_per_hop=batch.num_sampled_nodes,
+            num_sampled_edges_per_hop=batch.num_sampled_edges, trim=True),
+        params)
+    assert f_trim["dot_flops"] < f_full["dot_flops"] * 0.8
+
+
+# -------------------------------------------------------------------- hetero
+def _hetero_fixture(rng):
+    nt = ["a", "b"]
+    et = [("a", "ab", "b"), ("b", "ba", "a")]
+    x = {"a": jnp.asarray(rng.standard_normal((12, 8)).astype(np.float32)),
+         "b": jnp.asarray(rng.standard_normal((9, 8)).astype(np.float32))}
+    ei = {("a", "ab", "b"): jnp.asarray(np.stack(
+        [rng.integers(0, 12, 30), rng.integers(0, 9, 30)]).astype(np.int32)),
+        ("b", "ba", "a"): jnp.asarray(np.stack(
+            [rng.integers(0, 9, 30), rng.integers(0, 12, 30)]).astype(
+            np.int32))}
+    return nt, et, x, ei
+
+
+def test_hetero_conv_matches_manual(rng):
+    nt, et, x, ei = _hetero_fixture(rng)
+    convs = {t: SAGEConv(8, 16) for t in et}
+    hc = HeteroConv(convs, aggr="sum")
+    params = hc.init(jax.random.PRNGKey(0))
+    out = hc.apply(params, x, ei, {"a": 12, "b": 9})
+    manual_b = convs[et[0]].apply(params["a__ab__b"], (x["a"], x["b"]),
+                                  ei[et[0]], num_nodes=9)
+    np.testing.assert_allclose(np.asarray(out["b"]), np.asarray(manual_b),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_to_hetero_replicates_per_edge_type(rng):
+    nt, et, x, ei = _hetero_fixture(rng)
+    model = to_hetero(lambda i, o: SAGEConv(i, o), (nt, et), [8, 16, 4])
+    params = model.init(jax.random.PRNGKey(0))
+    # param structure: one conv per edge type per layer
+    assert set(params["layer0"].keys()) == {"a__ab__b", "b__ba__a"}
+    out = model.apply(params, x, ei)
+    assert out["a"].shape == (12, 4) and out["b"].shape == (9, 4)
+    g = jax.grad(lambda p: sum(
+        (v ** 2).sum() for v in model.apply(p, x, ei).values()))(params)
+    assert all(np.isfinite(np.asarray(l)).all()
+               for l in jax.tree_util.tree_leaves(g))
+
+
+def test_grouped_linear_matches_loop(rng):
+    types = ["t0", "t1", "t2"]
+    x = {t: jnp.asarray(rng.standard_normal((5 + i, 12)).astype(np.float32))
+         for i, t in enumerate(types)}
+    gl = GroupedLinear(types, 12, 20)
+    p = gl.init(jax.random.PRNGKey(0))
+    out = gl.apply(p, x)
+    for i, t in enumerate(types):
+        np.testing.assert_allclose(np.asarray(out[t]),
+                                   np.asarray(x[t] @ p["w"][i]), rtol=2e-4,
+                                   atol=2e-4)
+
+
+# ------------------------------------------------------------- explainability
+def test_explainer_algorithms_produce_masks(rng):
+    n, e, f = 30, 100, 8
+    ei = EdgeIndex.from_coo(rng.integers(0, n, e).astype(np.int32),
+                            rng.integers(0, n, e).astype(np.int32), n, n)
+    x = jnp.asarray(rng.standard_normal((n, f)).astype(np.float32))
+    model = make_model("gcn", f, 16, 3, 2)
+    params = model.init(jax.random.PRNGKey(0))
+    for algo in ("saliency", "integrated_gradients", "gnn_explainer"):
+        expl = Explainer(model, params, algorithm=algo, epochs=10)(
+            x, ei, node_idx=5)
+        assert expl.edge_mask.shape == (e,)
+        assert np.isfinite(np.asarray(expl.edge_mask)).all()
+        assert set(expl.metrics) == {"fidelity_plus", "fidelity_minus",
+                                     "unfaithfulness"}
+
+
+def test_attention_explainer_uses_gat(rng):
+    n, e, f = 25, 80, 8
+    ei = EdgeIndex.from_coo(rng.integers(0, n, e).astype(np.int32),
+                            rng.integers(0, n, e).astype(np.int32), n, n)
+    x = jnp.asarray(rng.standard_normal((n, f)).astype(np.float32))
+    model = make_model("gat", f, 16, 3, 2)
+    params = model.init(jax.random.PRNGKey(0))
+    expl = Explainer(model, params, algorithm="attention")(x, ei, node_idx=2)
+    assert expl.edge_mask.shape == (e,)
+
+
+def test_gnn_explainer_finds_planted_edge(rng):
+    """A label fully determined by one edge must rank that edge top-3."""
+    n, f = 12, 4
+    # node 0's representation driven by node 1 through edge (1 -> 0)
+    src = np.concatenate([[1], rng.integers(2, n, 20)]).astype(np.int32)
+    dst = np.concatenate([[0], rng.integers(2, n, 20)]).astype(np.int32)
+    ei = EdgeIndex.from_coo(src, dst, n, n)
+    x = np.zeros((n, f), np.float32)
+    x[1] = 10.0  # only node 1 carries signal
+    model = make_model("sage", f, 8, 2, 1)
+    params = model.init(jax.random.PRNGKey(1))
+    expl = Explainer(model, params, algorithm="gnn_explainer", epochs=80)(
+        jnp.asarray(x), ei, node_idx=0)
+    assert 0 in expl.top_edges(3), "planted edge not in top-3"
