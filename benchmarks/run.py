@@ -14,7 +14,7 @@ import traceback
 
 def main() -> None:
     from benchmarks import (explainer_fidelity, grouped_matmul_bench,
-                            sampler_throughput, store_scaling,
+                            sampler_throughput, spmm_bench, store_scaling,
                             table12_compile_trim)
 
     suites = [
@@ -22,6 +22,7 @@ def main() -> None:
         ("sampler_throughput", sampler_throughput.run),
         ("store_scaling", store_scaling.run),
         ("grouped_matmul", grouped_matmul_bench.run),
+        ("spmm", spmm_bench.run),
         ("explainer_fidelity", explainer_fidelity.run),
     ]
     failed = []

@@ -1,0 +1,108 @@
+"""SpMM perf sweep: blocked-ELL vs XLA segment oracle, JSON trajectory.
+
+Sweeps (rows, K, F) cells over three implementations of the same sorted-
+adjacency SpMM (paper §2.2 — the message-passing hot loop):
+
+  * ``oracle``        — CSR gather + ``segment_sum`` (XLA-fused reference)
+  * ``ell_xla``       — blocked-ELL dense-masked reduction lowered by XLA
+  * ``ell_pallas``    — the pipelined Pallas kernel; compiled on TPU,
+                        interpret mode elsewhere (timing then measures the
+                        interpreter, so off-TPU it is recorded under
+                        ``ell_pallas_interpret_us`` and skipped for the
+                        larger cells)
+
+Writes ``BENCH_spmm.json`` next to the repo root so the perf trajectory of
+the kernel is recorded PR-over-PR. Also prints the usual CSV rows.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.kernels.spmm import ops as spmm_ops, ref as spmm_ref
+
+# (rows, K, F) cells. K is the padded neighbor budget per row.
+CELLS = [
+    (256, 4, 128),
+    (256, 16, 128),
+    (256, 16, 256),
+    (1024, 4, 128),
+    (1024, 16, 128),
+    (1024, 16, 256),
+    (4096, 8, 128),
+    (4096, 32, 256),
+]
+
+# Interpret-mode Pallas is a correctness vehicle, not a perf one; only the
+# small cells are worth the interpreter's while off-TPU.
+INTERPRET_MAX_WORK = 256 * 16 * 256
+
+
+def _make_cell(rng, rows: int, k: int, feat: int):
+    """Random ELL table (~15% padding) + its exact CSR equivalent."""
+    n = rows  # square-ish adjacency
+    ell = rng.integers(0, n, (rows, k)).astype(np.int32)
+    pad = rng.random((rows, k)) < 0.15
+    ell[pad] = -1
+    ell.sort(axis=1)  # -1s first ...
+    ell = ell[:, ::-1].copy()  # ... then flipped: valid-prefix layout
+    deg = (ell >= 0).sum(1)
+    indptr = np.concatenate([[0], np.cumsum(deg)]).astype(np.int64)
+    indices = ell[ell >= 0].astype(np.int32)
+    x = rng.standard_normal((n, feat)).astype(np.float32)
+    return ell, indptr, indices, x
+
+
+def run(out_path: str = "BENCH_spmm.json") -> None:
+    on_tpu = jax.default_backend() == "tpu"
+    rng = np.random.default_rng(7)
+    records = []
+    for rows, k, feat in CELLS:
+        ell, indptr, indices, x = _make_cell(rng, rows, k, feat)
+        ell_j, x_j = jnp.asarray(ell), jnp.asarray(x)
+        indptr_j, indices_j = jnp.asarray(indptr), jnp.asarray(indices)
+
+        oracle = jax.jit(lambda p, i, x: spmm_ref.spmm_csr(
+            p, i, x, num_rows=rows, reduce="sum"))
+        ell_xla = jax.jit(lambda e, x: spmm_ref.spmm_ell(e, None, x))
+
+        a = oracle(indptr_j, indices_j, x_j)
+        b = ell_xla(ell_j, x_j)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+        rec = {
+            "rows": rows, "k": k, "feat": feat,
+            "backend": jax.default_backend(),
+            "oracle_us": time_fn(oracle, indptr_j, indices_j, x_j),
+            "ell_xla_us": time_fn(ell_xla, ell_j, x_j),
+        }
+        run_pallas = on_tpu or rows * k * feat <= INTERPRET_MAX_WORK
+        if run_pallas:
+            interpret = not on_tpu
+            pallas = jax.jit(lambda e, x: spmm_ops.spmm_ell(
+                e, None, x, force_pallas=True, interpret=interpret))
+            c = pallas(ell_j, x_j)
+            np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                       rtol=1e-4, atol=1e-4)
+            key = "ell_pallas_us" if on_tpu else "ell_pallas_interpret_us"
+            rec[key] = time_fn(pallas, ell_j, x_j, warmup=1, iters=3)
+        records.append(rec)
+        tag = f"spmm/r{rows}k{k}f{feat}"
+        emit(f"{tag}/oracle_us", rec["oracle_us"])
+        emit(f"{tag}/ell_xla_us", rec["ell_xla_us"],
+             f"vs_oracle={rec['oracle_us'] / rec['ell_xla_us']:.2f}x")
+
+    with open(out_path, "w") as fh:
+        json.dump(records, fh, indent=2)
+    print(f"# wrote {os.path.abspath(out_path)} ({len(records)} cells)")
+
+
+if __name__ == "__main__":
+    run()

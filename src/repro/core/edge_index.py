@@ -9,6 +9,8 @@ this metadata to pick the optimal compute path:
 * sorted-by-col  -> fused CSC path (transposed flow)
 * cached CSC     -> cheap backward (no re-derivation of ``A^T`` per step)
 * undirected     -> ``A == A^T``; a single cache serves both directions
+* cached ELL     -> degree-bucketed blocked-ELL packing feeding the Pallas
+  pipelined SpMM kernel on TPU (the demand-filled TPU fast path)
 
 This mirrors ``torch_geometric.EdgeIndex`` semantics adapted to JAX: the
 object is a registered pytree (arrays are leaves, metadata is static), so it
@@ -48,6 +50,10 @@ class EdgeIndex:
       sort_order:    None | "row" | "col" — which coordinate `data` is sorted by.
       is_undirected: if True, A == A^T and one cache serves both directions.
       _csr / _csc:   optional cached (indptr, indices, perm) triples.
+      _ell / _ell_t: optional cached degree-bucketed blocked-ELL packings of
+                     the CSC (forward) / CSR (transpose) adjacency — tuples of
+                     (row_ids, ell_idx, ell_pos) buckets feeding the Pallas
+                     pipelined SpMM kernel.
     """
 
     data: jnp.ndarray
@@ -57,19 +63,21 @@ class EdgeIndex:
     is_undirected: bool = False
     _csr: Optional[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]] = None
     _csc: Optional[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]] = None
+    _ell: Optional[Tuple] = None
+    _ell_t: Optional[Tuple] = None
 
     # ------------------------------------------------------------------ pytree
     def tree_flatten(self):
-        children = (self.data, self._csr, self._csc)
+        children = (self.data, self._csr, self._csc, self._ell, self._ell_t)
         aux = (self.num_src_nodes, self.num_dst_nodes, self.sort_order,
                self.is_undirected)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        data, csr, csc = children
+        data, csr, csc, ell, ell_t = children
         ns, nd, so, undirected = aux
-        return cls(data, ns, nd, so, undirected, csr, csc)
+        return cls(data, ns, nd, so, undirected, csr, csc, ell, ell_t)
 
     # ------------------------------------------------------------- constructors
     @classmethod
@@ -165,23 +173,80 @@ class EdgeIndex:
             self._csc = out
         return out
 
-    def fill_cache(self) -> "EdgeIndex":
-        """Eagerly fill both caches (used before entering a jit'd loop)."""
+    def get_ell(self, transpose: bool = False) -> Optional[Tuple]:
+        """Degree-bucketed blocked-ELL packing of A (or A^T) for the Pallas
+        SpMM kernel: a tuple of ``(row_ids, ell_idx, ell_pos)`` buckets
+        (see ``kernels.spmm.ops.csr_to_ell_bucketed``).
+
+        The packing needs concrete (host) arrays — called with tracers it
+        returns ``None`` and the caller falls back to the XLA oracle; filled
+        eagerly once, the cached buckets become jit constants afterwards.
+        """
+        from repro.kernels.spmm import ops as spmm_ops  # local import: no cycle
+        if self.is_undirected and transpose:  # A == A^T: one packing serves
+            transpose = False
+        cache = self._ell_t if transpose else self._ell
+        if cache is not None:
+            return cache
+        indptr, indices, _ = self.get_csr() if transpose else self.get_csc()
+        if not self._memoizable((indptr, indices)):
+            return None
+        buckets = tuple(
+            (jnp.asarray(r), jnp.asarray(i), jnp.asarray(p))
+            for r, i, p in spmm_ops.csr_to_ell_bucketed(
+                np.asarray(indptr), np.asarray(indices)))
+        if transpose:
+            self._ell_t = buckets
+        else:
+            self._ell = buckets
+        return buckets
+
+    def fill_cache(self, ell: Optional[bool] = None) -> "EdgeIndex":
+        """Eagerly fill the caches (used before entering a jit'd loop).
+
+        ``ell`` additionally packs the blocked-ELL buckets for the Pallas
+        fast path; the default (``None``) packs them exactly when dispatch
+        would select that path (TPU backend or ``REPRO_USE_PALLAS=1``), so
+        the documented "fill_cache() before jit" pattern reaches the kernel
+        without an extra opt-in.
+        """
+        from repro.kernels import use_pallas
         self.get_csr()
         if not self.is_undirected:
             self.get_csc()
+        if use_pallas() if ell is None else ell:
+            self.get_ell()
+            self.get_ell(transpose=True)
         return self
 
     # --------------------------------------------------------------------- spmm
     def matmul(self, x: jnp.ndarray, edge_weight: Optional[jnp.ndarray] = None,
-               transpose: bool = False, reduce: str = "sum") -> jnp.ndarray:
+               transpose: bool = False, reduce: str = "sum",
+               force_pallas: Optional[bool] = None,
+               interpret: Optional[bool] = None) -> jnp.ndarray:
         """Sparse(A or A^T) @ dense(x) using the best available path.
 
         ``A[dst, src] = w`` convention: forward message passing aggregates
         source features into destinations, i.e. ``out = A @ x`` with A of
         shape (num_dst, num_src).
+
+        Dispatch: on TPU (or ``force_pallas=True``) the degree-bucketed
+        blocked-ELL packing feeds the pipelined Pallas kernel; otherwise —
+        or when packing is impossible (tracing without a filled ELL cache) —
+        the fused XLA segment oracle runs.
         """
         from repro.kernels.spmm import ops as spmm_ops  # local import: no cycle
+        from repro.kernels import use_pallas
+        num_rows = self.num_src_nodes if transpose else self.num_dst_nodes
+        take_pallas = use_pallas() if force_pallas is None else force_pallas
+        if take_pallas:
+            ell = self.get_ell(transpose=transpose)
+            if ell is not None:
+                _, _, perm = (self.get_csr() if transpose else self.get_csc())
+                w = None if edge_weight is None else edge_weight[perm]
+                return spmm_ops.spmm_ell_bucketed(
+                    ell, x, w, num_rows=num_rows, reduce=reduce,
+                    force_pallas=take_pallas, interpret=interpret)
         if not transpose:
             colptr, row, perm = self.get_csc()
             w = None if edge_weight is None else edge_weight[perm]

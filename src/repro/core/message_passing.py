@@ -83,12 +83,16 @@ class MessagePassing(Module):
             x_src, x_dst = x_dst, x_src
 
         # ---- fused SpMM path (paper: sorted EdgeIndex -> SpMM + segments)
+        # All four dense-reducible modes lower to the SpMM kernel: the
+        # blocked-ELL Pallas kernel (and the XLA oracle) implement max/min
+        # masking natively, so the dispatcher no longer restricts to
+        # sum/mean.
         fused_ok = (
             self._message_is_default()
             and message_callback is None
             and edge_attr is None
             and isinstance(edge_index, EdgeIndex)
-            and self.aggr.name in ("sum", "mean")
+            and self.aggr.name in ("sum", "mean", "max", "min")
             and self.flow == "source_to_target"
         )
         if fused_ok:

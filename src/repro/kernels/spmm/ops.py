@@ -1,9 +1,25 @@
-"""Public SpMM entry points with kernel/oracle dispatch + format packing."""
+"""Public SpMM entry points with kernel/oracle dispatch + format packing.
+
+Dispatch decision tree (see also ROADMAP.md):
+
+    spmm over a sorted adjacency
+    ├── CSR given directly (`spmm_csr`)          -> XLA segment oracle
+    └── blocked-ELL given (`spmm_ell[_bucketed]`)
+        ├── TPU backend, or `force_pallas=True`  -> Pallas pipelined kernel
+        │     └── non-TPU backend               -> interpret mode (tests)
+        └── otherwise                            -> jnp ELL oracle (XLA fuses)
+
+Packing is host-side (shape decisions cannot trace): ``csr_to_ell`` pads
+every row to one fixed K; ``csr_to_ell_bucketed`` instead groups rows into
+power-of-two-K degree buckets so skewed real-world degree distributions do
+not pay max-degree padding — one kernel launch per bucket, disjoint row
+sets scattered back into a single output.
+"""
 
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -13,6 +29,14 @@ from repro.kernels import use_pallas
 from repro.kernels.spmm import ref
 from repro.kernels.spmm.spmm import spmm_ell_pallas
 
+# A degree bucket: (row_ids, ell_idx, ell_pos).
+#   row_ids: (R_b,)      original row ids covered by this bucket
+#   ell_idx: (R_pad, K)  int32 neighbor table, -1 = padding, R_pad % BR == 0
+#   ell_pos: (R_pad, K)  int32 position of each slot in the CSR edge order
+#                        (-1 = padding) — lets callers gather per-call edge
+#                        weights without re-packing.
+EllBucket = Tuple[np.ndarray, np.ndarray, np.ndarray]
+
 
 def spmm_csr(indptr: jnp.ndarray, indices: jnp.ndarray, x: jnp.ndarray,
              weight: Optional[jnp.ndarray] = None, *, num_rows: int,
@@ -20,46 +44,154 @@ def spmm_csr(indptr: jnp.ndarray, indices: jnp.ndarray, x: jnp.ndarray,
     """CSR SpMM — jit-friendly; XLA path everywhere, Pallas on TPU via ELL.
 
     The CSR->ELL conversion requires host-side shape decisions, so the Pallas
-    path is taken only when the caller pre-packs via :func:`csr_to_ell`;
-    direct CSR calls use the fused XLA oracle (itself the paper's "sorted
-    segment reduction" fast path).
+    path is taken only when the caller pre-packs via :func:`csr_to_ell` /
+    :func:`csr_to_ell_bucketed` (``EdgeIndex`` does this in its demand-filled
+    ELL cache); direct CSR calls use the fused XLA oracle (itself the paper's
+    "sorted segment reduction" fast path).
     """
     return ref.spmm_csr(indptr, indices, x, weight, num_rows=num_rows,
                         reduce=reduce)
+
+
+def _ell_positions(starts: np.ndarray, deg: np.ndarray, k: int,
+                   block_rows: int) -> np.ndarray:
+    """Vectorised CSR -> ELL slot map: (R_pad, k) edge positions, -1 = pad.
+
+    ``starts[i]`` is row i's first edge position, ``deg[i]`` its length —
+    callers pass either the full CSR (``indptr[:-1], diff(indptr)``) or a
+    row subset (one degree bucket). Rows longer than ``k`` truncate; the row
+    count pads up to a ``block_rows`` multiple.
+    """
+    num_rows = len(deg)
+    rows_pad = -(-max(num_rows, 1) // block_rows) * block_rows
+    cols = np.arange(k)
+    mask = cols[None, :] < np.minimum(deg, k)[:, None]
+    pos = np.where(mask, starts[:, None] + cols[None, :], -1)
+    if rows_pad > num_rows:
+        pos = np.concatenate(
+            [pos, np.full((rows_pad - num_rows, k), -1, pos.dtype)], axis=0)
+    return pos.astype(np.int32)
 
 
 def csr_to_ell(indptr: np.ndarray, indices: np.ndarray,
                weight: Optional[np.ndarray] = None, *, block_rows: int = 8,
                k: Optional[int] = None
                ) -> Tuple[np.ndarray, Optional[np.ndarray]]:
-    """Host-side CSR -> blocked-ELL packing (rows padded to `k` neighbors)."""
+    """Host-side CSR -> blocked-ELL packing (rows padded to `k` neighbors).
+
+    Fully vectorised (no per-row Python loop); rows longer than ``k`` are
+    truncated, shorter rows padded with ``-1``.
+    """
     indptr = np.asarray(indptr)
     indices = np.asarray(indices)
-    num_rows = len(indptr) - 1
     deg = np.diff(indptr)
     if k is None:
-        k = max(int(deg.max()) if num_rows else 1, 1)
-    rows_pad = -(-num_rows // block_rows) * block_rows
-    ell_idx = np.full((rows_pad, k), -1, np.int32)
-    ell_w = None if weight is None else np.zeros((rows_pad, k), np.float32)
-    for r in range(num_rows):
-        lo, hi = int(indptr[r]), int(indptr[r + 1])
-        take = min(hi - lo, k)
-        ell_idx[r, :take] = indices[lo:lo + take]
-        if weight is not None:
-            ell_w[r, :take] = weight[lo:lo + take]
+        k = max(int(deg.max()) if deg.size else 1, 1)
+    pos = _ell_positions(indptr[:-1], deg, k, block_rows)
+    mask = pos >= 0
+    safe = np.where(mask, pos, 0)
+    ell_idx = np.where(mask, indices[safe], -1).astype(np.int32)
+    ell_w = None
+    if weight is not None:
+        ell_w = np.where(mask, np.asarray(weight)[safe], 0.0).astype(
+            np.float32)
     return ell_idx, ell_w
+
+
+def csr_to_ell_bucketed(indptr: np.ndarray, indices: np.ndarray, *,
+                        block_rows: int = 8,
+                        min_k: int = 4) -> List[EllBucket]:
+    """CSR -> degree-bucketed blocked-ELL (power-of-two K ladder).
+
+    Bucket ``j`` holds the rows with degree in ``(K_j/2, K_j]`` where
+    ``K_j = min_k * 2**j`` (the first bucket takes degrees ``1..min_k``), so
+    per-row padding waste is bounded by 2x instead of max-degree. Zero-degree
+    rows appear in no bucket (their output is the reduce identity / 0 fill).
+    Every edge appears in exactly one bucket and every row in at most one.
+    """
+    indptr = np.asarray(indptr)
+    indices = np.asarray(indices)
+    deg = np.diff(indptr)
+    buckets: List[EllBucket] = []
+    if deg.size == 0 or int(deg.max()) == 0:
+        return buckets
+    max_deg = int(deg.max())
+    lower, k = 0, min_k
+    while lower < max_deg:
+        sel = np.nonzero((deg > lower) & (deg <= k))[0]
+        if sel.size:
+            pos = _ell_positions(indptr[sel], deg[sel], k, block_rows)
+            safe = np.where(pos >= 0, pos, 0)
+            ell_idx = np.where(pos >= 0, indices[safe], -1).astype(np.int32)
+            buckets.append((sel.astype(np.int32), ell_idx, pos))
+        lower, k = k, k * 2
+    return buckets
+
+
+# The neighbor table rides scalar prefetch into SMEM on real TPUs, which is
+# KB-scale: bound the per-launch table and chunk the row dimension above it.
+# 64k int32 = 256 KB per launch; shapes are host-known so the chunk loop is
+# a static Python loop (one pallas_call per chunk, shared compiled kernel
+# across equal-shaped chunks).
+MAX_PREFETCH_ELEMS = 64 * 1024
 
 
 def spmm_ell(ell_idx: jnp.ndarray, ell_w: Optional[jnp.ndarray],
              x: jnp.ndarray, *, reduce: str = "sum",
              force_pallas: Optional[bool] = None,
-             interpret: bool = False) -> jnp.ndarray:
-    """Blocked-ELL SpMM: Pallas kernel on TPU (or when forced), oracle else."""
+             interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Blocked-ELL SpMM: Pallas kernel on TPU (or when forced), oracle else.
+
+    ``interpret=None`` auto-selects interpret mode off-TPU so a forced Pallas
+    path stays runnable (and testable) on CPU containers. Tables larger than
+    ``MAX_PREFETCH_ELEMS`` are split along rows into multiple launches so the
+    scalar-prefetched neighbor table always fits SMEM.
+    """
     take_pallas = use_pallas() if force_pallas is None else force_pallas
-    if take_pallas:
-        feat = x.shape[1]
-        bf = 128 if feat % 128 == 0 else feat
+    if not take_pallas:
+        return ref.spmm_ell(ell_idx, ell_w, x, reduce=reduce)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    feat = x.shape[1]
+    bf = 128 if feat % 128 == 0 else feat
+    rows, k = ell_idx.shape
+    from repro.kernels.spmm.spmm import DEFAULT_BR
+    chunk = max(MAX_PREFETCH_ELEMS // max(k, 1), DEFAULT_BR)
+    chunk -= chunk % DEFAULT_BR
+    if rows <= chunk:
         return spmm_ell_pallas(ell_idx, ell_w, x, reduce=reduce,
                                block_feat=bf, interpret=interpret)
-    return ref.spmm_ell(ell_idx, ell_w, x, reduce=reduce)
+    outs = []
+    for lo in range(0, rows, chunk):
+        hi = min(lo + chunk, rows)
+        outs.append(spmm_ell_pallas(
+            ell_idx[lo:hi], None if ell_w is None else ell_w[lo:hi], x,
+            reduce=reduce, block_feat=bf, interpret=interpret))
+    return jnp.concatenate(outs, axis=0)
+
+
+def spmm_ell_bucketed(buckets: Sequence[EllBucket], x: jnp.ndarray,
+                      weight: Optional[jnp.ndarray] = None, *,
+                      num_rows: int, reduce: str = "sum",
+                      force_pallas: Optional[bool] = None,
+                      interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Degree-bucketed blocked-ELL SpMM: one kernel launch per bucket.
+
+    ``weight`` is per-edge in CSR order (the order ``csr_to_ell_bucketed``
+    packed from); each bucket gathers its slots' weights through ``ell_pos``.
+    Rows absent from every bucket (degree 0) keep the 0 fill — identical to
+    the oracle's empty-segment convention for every reduce mode.
+    """
+    out = jnp.zeros((num_rows,) + x.shape[1:], x.dtype)
+    for row_ids, ell_idx, ell_pos in buckets:
+        w_b = None
+        if weight is not None:
+            mask = ell_pos >= 0
+            w_b = jnp.where(mask,
+                            jnp.asarray(weight)[jnp.maximum(ell_pos, 0)],
+                            0.0).astype(jnp.float32)
+        res = spmm_ell(jnp.asarray(ell_idx), w_b, x, reduce=reduce,
+                       force_pallas=force_pallas, interpret=interpret)
+        out = out.at[jnp.asarray(row_ids)].set(
+            res[: len(row_ids)].astype(x.dtype))
+    return out

@@ -1,9 +1,13 @@
 """GNN operator zoo — the five architectures benchmarked in paper Tables 1-2
 (GCN, GraphSAGE, GIN, GAT, EdgeCNN) built on the MessagePassing framework.
 
-GCN/SAGE/GIN use the *fused* SpMM path (default message + sum/mean/max);
+GCN/SAGE/GIN use the *fused* SpMM path (default message + sum/mean/max/min
+— all four reduce modes now lower to the blocked-ELL Pallas kernel on TPU);
 GAT and EdgeCNN exercise the edge-level materialisation path (custom
 messages, segment softmax) — together they cover both compute paths of C2.
+GCNConv wraps a raw ``(2, E)`` edge array into an ``EdgeIndex`` once so the
+fused path (and its demand-filled CSC/ELL caches) is reachable even when
+callers don't construct one themselves.
 """
 
 from __future__ import annotations
@@ -54,10 +58,11 @@ class GCNConv(MessagePassing):
               edge_weight: Optional[jnp.ndarray] = None,
               self_weight: Optional[jnp.ndarray] = None, **kw):
         n = num_nodes if num_nodes is not None else x.shape[0]
+        if not isinstance(edge_index, EdgeIndex):
+            edge_index = EdgeIndex(edge_index, n, n)
         if edge_weight is None:
-            edge_weight, self_weight = gcn_norm(
-                edge_index if isinstance(edge_index, EdgeIndex)
-                else EdgeIndex(edge_index, n, n), n, self.add_self_loops)
+            edge_weight, self_weight = gcn_norm(edge_index, n,
+                                                self.add_self_loops)
         x = self.lin.apply(params["lin"], x)
         out = self.propagate(params, edge_index, x,
                              edge_weight=edge_weight, num_nodes=n, **kw)

@@ -7,6 +7,64 @@ os.environ.setdefault("JAX_PLATFORMS", "cpu")
 import numpy as np
 import pytest
 
+# ---------------------------------------------------------------------------
+# `hypothesis` fallback: the container may not ship hypothesis; rather than
+# losing the whole suite to a collection error, install a minimal
+# deterministic stand-in covering exactly the API our tests use
+# (given / settings / st.integers / st.sampled_from). Real hypothesis, when
+# present, is always preferred.
+# ---------------------------------------------------------------------------
+try:  # pragma: no cover - trivial import probe
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:  # pragma: no cover - exercised only without dep
+    import sys
+    import types
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    def _integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    def _sampled_from(options):
+        opts = list(options)
+        return _Strategy(lambda rng: opts[int(rng.integers(0, len(opts)))])
+
+    def _given(*strategies):
+        def deco(fn):
+            # Zero-arg wrapper: drawn arguments must not look like pytest
+            # fixtures, so the original signature is deliberately hidden.
+            def runner():
+                n = getattr(runner, "_max_examples", 10)
+                rng = np.random.default_rng(0xC0FFEE)
+                for _ in range(n):
+                    fn(*(s.draw(rng) for s in strategies))
+
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            return runner
+
+        return deco
+
+    def _settings(max_examples=10, deadline=None, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    _hyp = types.ModuleType("hypothesis")
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _integers
+    _st.sampled_from = _sampled_from
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.strategies = _st
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st
+
 
 @pytest.fixture
 def rng():

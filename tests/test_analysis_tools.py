@@ -117,7 +117,9 @@ def test_sharding_specs_divisible_for_all_archs():
 
     for mesh_shape, axes in (((16, 16), ("data", "model")),
                              ((2, 16, 16), ("pod", "data", "model"))):
-        mesh = AbstractMesh(mesh_shape, axes)
+        # jax 0.4.37 AbstractMesh signature: a ((name, size), ...) tuple
+        # (newer jax takes (shape, axis_names) — pass the portable form).
+        mesh = AbstractMesh(tuple(zip(axes, mesh_shape)))
         for arch in ARCH_IDS:
             cfg = get_config(arch)
             params = specs_lib.abstract_params(cfg)
