@@ -23,6 +23,7 @@ def main() -> None:
         ("store_scaling", store_scaling.run),
         ("grouped_matmul", grouped_matmul_bench.run),
         ("spmm", spmm_bench.run),
+        ("spmm_loader_step", spmm_bench.run_loader_step),
         ("explainer_fidelity", explainer_fidelity.run),
     ]
     failed = []

@@ -17,6 +17,7 @@ the kernel is recorded PR-over-PR. Also prints the usual CSV rows.
 
 from __future__ import annotations
 
+import functools
 import json
 import os
 
@@ -99,10 +100,138 @@ def run(out_path: str = "BENCH_spmm.json") -> None:
         emit(f"{tag}/ell_xla_us", rec["ell_xla_us"],
              f"vs_oracle={rec['oracle_us'] / rec['ell_xla_us']:.2f}x")
 
+    # keep non-sweep cells (e.g. loader_step) from a previous run
+    if os.path.exists(out_path):
+        with open(out_path) as fh:
+            records += [r for r in json.load(fh) if "cell" in r]
     with open(out_path, "w") as fh:
         json.dump(records, fh, indent=2)
     print(f"# wrote {os.path.abspath(out_path)} ({len(records)} cells)")
 
 
+def run_loader_step(out_path: str = "BENCH_spmm.json") -> None:
+    """End-to-end loader -> jit'd train-step cell (the PR-2 serving path).
+
+    Measures what the jit-ready producer buys: a NeighborLoader batch with
+    host-prefilled CSR/CSC (+ static ELL) caches flows through a jit'd
+    2-layer GNN step as one pytree with a SINGLE compilation across
+    batches, versus re-deriving the CSC sort inside the trace every step
+    from the raw COO. Also proves the Pallas ELL dispatch from a
+    loader-emitted batch on a small forced-interpret cell. Appends a
+    ``loader_step`` record to ``BENCH_spmm.json``.
+    """
+    import time
+
+    from repro.data.data import Data
+    from repro.data.loader import NeighborLoader
+    from repro.core.edge_index import EdgeIndex
+
+    rng = np.random.default_rng(11)
+    n, e, feat, hidden = 4096, 32768, 128, 64
+    batch_size, fanouts = 64, [10, 5]
+    data = Data(x=rng.standard_normal((n, feat)).astype(np.float32),
+                edge_index=np.stack([rng.integers(0, n, e),
+                                     rng.integers(0, n, e)]),
+                y=rng.integers(0, 4, n))
+    loader = NeighborLoader(data, data, num_neighbors=fanouts,
+                            batch_size=batch_size, shuffle=True,
+                            prefetch=2, prefill_ell=True, seed=0)
+    params = {
+        "w1": jnp.asarray(rng.standard_normal((feat, hidden)) * 0.1,
+                          jnp.float32),
+        "w2": jnp.asarray(rng.standard_normal((hidden, 4)) * 0.1,
+                          jnp.float32),
+    }
+    traces = []
+
+    @jax.jit
+    def step_cached(params, batch):
+        traces.append(1)  # trace counter: must stay at 1 across batches
+
+        def loss_fn(p):
+            h = jax.nn.relu(batch.edge_index.matmul(batch.x @ p["w1"]))
+            out = batch.edge_index.matmul(h @ p["w2"])
+            return (out[batch.seed_slots] ** 2).mean()
+
+        return jax.value_and_grad(loss_fn)(params)
+
+    @functools.partial(jax.jit, static_argnums=(4,))
+    def step_raw(params, x, edge_data, seed_slots, num_nodes):
+        # identical math, but the CSC sort happens inside the trace
+        ei = EdgeIndex(edge_data, int(num_nodes), int(num_nodes))
+
+        def loss_fn(p):
+            h = jax.nn.relu(ei.matmul(x @ p["w1"]))
+            out = ei.matmul(h @ p["w2"])
+            return (out[seed_slots] ** 2).mean()
+
+        return jax.value_and_grad(loss_fn)(params)
+
+    t0 = time.perf_counter()
+    batches = []
+    it = iter(loader)
+    for _ in range(4):
+        batches.append(next(it))
+    make_batch_us = (time.perf_counter() - t0) / 4 * 1e6
+
+    # warm up both variants, then time across distinct batches
+    step_cached(params, batches[0])[0].block_until_ready()
+    b0 = batches[0]
+    step_raw(params, b0.x, b0.edge_index.data, b0.seed_slots,
+             b0.num_nodes)[0].block_until_ready()
+
+    def time_over_batches(fn, rounds: int = 3):
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            for b in batches:
+                fn(b)[0].block_until_ready()
+        return (time.perf_counter() - t0) / (rounds * len(batches)) * 1e6
+
+    cached_us = time_over_batches(lambda b: step_cached(params, b))
+    raw_us = time_over_batches(
+        lambda b: step_raw(params, b.x, b.edge_index.data, b.seed_slots,
+                           b.num_nodes))
+    assert len(traces) == 1, f"recompiled across batches: {len(traces)}"
+
+    # loader -> Pallas dispatch proof on a tiny forced-interpret cell
+    small = NeighborLoader(data, data, num_neighbors=[4, 2], batch_size=8,
+                           prefill_ell=True, seed=0)
+    sb = next(iter(small))
+    on_tpu = jax.default_backend() == "tpu"
+    pallas_step = jax.jit(lambda b: b.edge_index.matmul(
+        b.x, force_pallas=True))
+    got = pallas_step(sb)
+    ref = EdgeIndex(sb.edge_index.data, sb.num_nodes, sb.num_nodes).matmul(
+        sb.x, force_pallas=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-4,
+                               atol=1e-4)
+    key = ("loader_pallas_us" if on_tpu else "loader_pallas_interpret_us")
+    rec = {
+        "cell": "loader_step",
+        "backend": jax.default_backend(),
+        "nodes": n, "edges": e, "feat": feat,
+        "batch_size": batch_size, "fanouts": fanouts,
+        "make_batch_us": make_batch_us,
+        "step_cached_us": cached_us,
+        "step_raw_us": raw_us,
+        "trace_count": len(traces),
+        key: time_fn(pallas_step, sb, warmup=1, iters=3),
+    }
+    emit("spmm/loader_step/cached_us", cached_us,
+         f"vs_raw={raw_us / cached_us:.2f}x")
+    emit("spmm/loader_step/make_batch_us", make_batch_us)
+
+    records = []
+    if os.path.exists(out_path):
+        with open(out_path) as fh:
+            records = [r for r in json.load(fh)
+                       if r.get("cell") != "loader_step"]
+    records.append(rec)
+    with open(out_path, "w") as fh:
+        json.dump(records, fh, indent=2)
+    print(f"# wrote {os.path.abspath(out_path)} (+ loader_step cell)")
+
+
 if __name__ == "__main__":
     run()
+    run_loader_step()

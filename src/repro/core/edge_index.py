@@ -85,12 +85,65 @@ class EdgeIndex:
                  sort_order: SortOrder = None, is_undirected: bool = False):
         src = jnp.asarray(src, jnp.int32)
         dst = jnp.asarray(dst, jnp.int32)
+        if (num_src_nodes is None or num_dst_nodes is None) and (
+                isinstance(src, jax.core.Tracer)
+                or isinstance(dst, jax.core.Tracer)):
+            raise ValueError(
+                "EdgeIndex.from_coo: num_src_nodes/num_dst_nodes must be "
+                "passed explicitly when the edge arrays are traced (inside "
+                "jit/vmap/grad). Node counts are static shape metadata and "
+                "cannot be derived from a tracer's values.")
         if num_src_nodes is None:
             num_src_nodes = int(src.max()) + 1 if src.size else 0
         if num_dst_nodes is None:
             num_dst_nodes = int(dst.max()) + 1 if dst.size else 0
         return cls(jnp.stack([src, dst]), int(num_src_nodes), int(num_dst_nodes),
                    sort_order, is_undirected)
+
+    @classmethod
+    def from_coo_prefilled(cls, src, dst, num_src_nodes: int,
+                           num_dst_nodes: int, *, ell_layout=None,
+                           block_rows: int = 8) -> "EdgeIndex":
+        """Host-side construct-with-caches: the jit-ready producer path.
+
+        Sorts the COO by destination (and by source) in NumPy, building the
+        CSC/CSR caches *before* the object ever reaches a jit boundary —
+        so a per-batch ``EdgeIndex`` passed as a jit argument carries its
+        conversions as pytree leaves instead of re-deriving them in-trace.
+        With ``ell_layout`` (see ``kernels.spmm.ops.ell_layout_from_bounds``)
+        it additionally packs the static-layout blocked-ELL cache, whose
+        shapes depend only on the layout: batches built against the same
+        layout share one jit trace and dispatch to the Pallas kernel.
+
+        ``data`` keeps the caller's edge order (the sampler's BFS hop
+        grouping, which layer-wise trimming slices); the destination-sorted
+        layout lives in the caches, each carrying its own permutation.
+        """
+        from repro.kernels.spmm import ops as spmm_ops  # local import: no cycle
+        src = np.asarray(src, np.int32)
+        dst = np.asarray(dst, np.int32)
+        perm_c = np.argsort(dst, kind="stable").astype(np.int32)
+        colptr = np.searchsorted(dst[perm_c], np.arange(
+            num_dst_nodes + 1)).astype(np.int32)
+        csc_idx = src[perm_c]
+        perm_r = np.argsort(src, kind="stable").astype(np.int32)
+        rowptr = np.searchsorted(src[perm_r], np.arange(
+            num_src_nodes + 1)).astype(np.int32)
+        csr_idx = dst[perm_r]
+        ell = None
+        if ell_layout is not None:
+            ell = tuple(
+                (jnp.asarray(r), jnp.asarray(i), jnp.asarray(p))
+                for r, i, p in spmm_ops.csr_to_ell_static(
+                    colptr, csc_idx, ell_layout, block_rows=block_rows))
+        return cls(
+            jnp.asarray(np.stack([src, dst])), int(num_src_nodes),
+            int(num_dst_nodes), None, False,
+            _csr=(jnp.asarray(rowptr), jnp.asarray(csr_idx),
+                  jnp.asarray(perm_r)),
+            _csc=(jnp.asarray(colptr), jnp.asarray(csc_idx),
+                  jnp.asarray(perm_c)),
+            _ell=ell)
 
     # ----------------------------------------------------------------- accessors
     @property

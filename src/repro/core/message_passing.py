@@ -86,18 +86,20 @@ class MessagePassing(Module):
         # All four dense-reducible modes lower to the SpMM kernel: the
         # blocked-ELL Pallas kernel (and the XLA oracle) implement max/min
         # masking natively, so the dispatcher no longer restricts to
-        # sum/mean.
+        # sum/mean. target_to_source flow is the same SpMM against A^T —
+        # `matmul(transpose=True)` reuses the CSR cache instead of falling
+        # back to edge-level materialisation.
         fused_ok = (
             self._message_is_default()
             and message_callback is None
             and edge_attr is None
             and isinstance(edge_index, EdgeIndex)
             and self.aggr.name in ("sum", "mean", "max", "min")
-            and self.flow == "source_to_target"
         )
         if fused_ok:
-            out = edge_index.matmul(x_src, edge_weight=edge_weight,
-                                    reduce=self.aggr.name)
+            out = edge_index.matmul(
+                x_src, edge_weight=edge_weight, reduce=self.aggr.name,
+                transpose=(self.flow == "target_to_source"))
             return out if self._update_is_default() else self.update(
                 params, out, x_dst)
 

@@ -4,6 +4,12 @@
 The loader is oblivious to the storage backends (swap InMemory for
 Partitioned without touching this file — the paper's plug-and-play claim)
 and emits **static-shape** batches so the jit'd step never recompiles.
+Batches are *jit-ready*: the producer path sorts the sampled COO by
+destination and pre-fills the ``EdgeIndex`` CSR/CSC caches host-side —
+plus, when Pallas dispatch is on, a static-layout blocked-ELL packing whose
+bucket shapes derive from the sampler's budgets, so per-batch edge indices
+passed as jit arguments take the Pallas SpMM path with a single compilation
+across batches. ``Batch`` is a registered pytree for exactly this reason.
 Supports externally-seeded iteration (training tables with per-seed
 timestamps + attached labels, the RDL workflow of §3.1) via ``transform``.
 """
@@ -15,6 +21,7 @@ import queue
 import threading
 from typing import Callable, Iterator, List, Optional, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -22,6 +29,8 @@ from repro.core.edge_index import EdgeIndex
 from repro.data.feature_store import FeatureStore
 from repro.data.graph_store import DEFAULT_ETYPE, GraphStore
 from repro.data.sampler import NeighborSampler, SamplerOutput
+from repro.kernels import use_pallas
+from repro.kernels.spmm.ops import ell_layout_from_bounds
 
 
 @dataclasses.dataclass
@@ -46,6 +55,27 @@ class Batch:
         return out[self.seed_slots]
 
 
+def _batch_flatten(b: Batch):
+    children = (b.x, b.edge_index, b.n_id, b.e_id, b.seed_slots, b.y,
+                b.edge_mask, b.extras)
+    aux = (tuple(b.num_sampled_nodes), tuple(b.num_sampled_edges))
+    return children, aux
+
+
+def _batch_unflatten(aux, children):
+    x, ei, n_id, e_id, seed_slots, y, edge_mask, extras = children
+    nn, ne = aux
+    return Batch(x=x, edge_index=ei, n_id=n_id, e_id=e_id,
+                 seed_slots=seed_slots, num_sampled_nodes=list(nn),
+                 num_sampled_edges=list(ne), y=y, edge_mask=edge_mask,
+                 extras=extras)
+
+
+# Batch flows through jit boundaries whole (the per-hop counts are static
+# aux data); identical budgets -> identical treedef -> no recompiles.
+jax.tree_util.register_pytree_node(Batch, _batch_flatten, _batch_unflatten)
+
+
 class NeighborLoader:
     def __init__(self, feature_store: FeatureStore, graph_store: GraphStore,
                  *, num_neighbors: Sequence[int], batch_size: int,
@@ -56,7 +86,8 @@ class NeighborLoader:
                  temporal_strategy: str = "uniform",
                  transform: Optional[Callable[[Batch], Batch]] = None,
                  shuffle: bool = False, drop_last: bool = True,
-                 prefetch: int = 0, seed: int = 0):
+                 prefetch: int = 0, prefill_ell: Optional[bool] = None,
+                 seed: int = 0):
         self.fs = feature_store
         self.sampler = NeighborSampler(
             graph_store, num_neighbors, edge_type=edge_type,
@@ -73,7 +104,18 @@ class NeighborLoader:
         self.shuffle = shuffle
         self.drop_last = drop_last
         self.prefetch = prefetch
+        # Static-layout ELL packing plan: depends only on the sampler's
+        # budgets and the seed count, shared by every batch of that size
+        # (a drop_last=False tail batch gets its own, smaller layout).
+        self.prefill_ell = prefill_ell
+        self._ell_layouts: dict = {}
         self.rng = np.random.default_rng(seed)
+
+    def _ell_layout_for(self, num_seeds: int):
+        if num_seeds not in self._ell_layouts:
+            self._ell_layouts[num_seeds] = ell_layout_from_bounds(
+                self.sampler.slot_degree_bounds(num_seeds))
+        return self._ell_layouts[num_seeds]
 
     def _make_batch(self, seeds: np.ndarray,
                     seed_time: Optional[np.ndarray]) -> Batch:
@@ -87,8 +129,11 @@ class NeighborLoader:
             except KeyError:
                 y = None
         n_slots = len(out.node)
-        ei = EdgeIndex(jnp.asarray(np.stack([out.row, out.col])).astype(
-            jnp.int32), n_slots, n_slots)
+        fill_ell = (use_pallas() if self.prefill_ell is None
+                    else self.prefill_ell)
+        ei = EdgeIndex.from_coo_prefilled(
+            out.row, out.col, n_slots, n_slots,
+            ell_layout=self._ell_layout_for(len(seeds)) if fill_ell else None)
         batch = Batch(
             x=jnp.asarray(x), edge_index=ei,
             n_id=jnp.asarray(out.node), e_id=jnp.asarray(out.edge),
@@ -121,20 +166,42 @@ class NeighborLoader:
         # adapted: vectorised sampling + a producer thread)
         q: "queue.Queue" = queue.Queue(maxsize=self.prefetch)
         stop = object()
+        abandoned = threading.Event()
 
         def producer():
-            for seeds, t in self._seed_batches():
-                q.put(self._make_batch(seeds, t))
+            # A raised exception must reach the consumer: swallowing it here
+            # would never enqueue the sentinel and deadlock `q.get()`.
+            try:
+                for seeds, t in self._seed_batches():
+                    if abandoned.is_set():
+                        return
+                    q.put(self._make_batch(seeds, t))
+            except BaseException as exc:  # noqa: BLE001 - re-raised below
+                q.put(exc)
+                return
             q.put(stop)
 
         th = threading.Thread(target=producer, daemon=True)
         th.start()
-        while True:
-            item = q.get()
-            if item is stop:
-                break
-            yield item
-        th.join()
+        try:
+            while True:
+                item = q.get()
+                if item is stop:
+                    break
+                if isinstance(item, BaseException):
+                    raise item
+                yield item
+        finally:
+            # Reap the producer even when the consumer abandons the iterator
+            # early (GeneratorExit): drain the bounded queue so a blocked
+            # q.put unblocks, then join.
+            abandoned.set()
+            while th.is_alive():
+                try:
+                    q.get_nowait()
+                except queue.Empty:
+                    pass
+                th.join(timeout=0.01)
 
     def __len__(self):
         n = len(self.input_nodes)

@@ -106,6 +106,34 @@ def _pick_neighbors(csr: CSRGraph, frontier: np.ndarray, fanout: int,
     return src.ravel(), eid.ravel(), parent.ravel()
 
 
+def static_slot_bounds(batch_size: int,
+                       num_neighbors: Sequence[int]) -> List[tuple]:
+    """Static per-slot in-degree bounds of a sampled batch subgraph.
+
+    The sampler's slot layout is fixed by its budgets: slot 0 is the null
+    sink (receives only padding edges), slots ``[1, 1+B)`` are the seeds,
+    then one block per hop of size ``B * prod(fanouts[:h])``. Edges produced
+    while expanding hop ``h`` always point *into* the hop-``h`` frontier
+    block, at most ``fanout[h]`` per frontier slot — so every slot's
+    in-degree is bounded by the fanout of the hop that expands it, and the
+    last hop's block (never expanded) receives none. These bounds hold for
+    shared (deduplicated) and disjoint batches alike, which is what lets the
+    loader pre-pack a *static-layout* blocked-ELL cache host-side.
+
+    Returns ``[(start, stop, max_in_degree), ...]`` row ranges in slot
+    space, covering exactly the slots that can receive edges.
+    """
+    fan = list(num_neighbors)
+    blocks = [(1, 1 + batch_size)]  # seeds
+    start, size = 1 + batch_size, batch_size
+    for f in fan:
+        size *= f
+        blocks.append((start, start + size))
+        start += size
+    return [(lo, hi, fan[i]) for i, (lo, hi) in enumerate(blocks)
+            if i < len(fan) and fan[i] > 0 and hi > lo]
+
+
 class NeighborSampler:
     """k-hop budgeted sampler over a GraphStore (homogeneous)."""
 
@@ -119,6 +147,10 @@ class NeighborSampler:
         self.disjoint = disjoint
         self.temporal_strategy = temporal_strategy
         self.rng = np.random.default_rng(seed)
+
+    def slot_degree_bounds(self, batch_size: int) -> List[tuple]:
+        """Static in-degree bounds per slot range (see static_slot_bounds)."""
+        return static_slot_bounds(batch_size, self.num_neighbors)
 
     def sample(self, seeds: np.ndarray,
                seed_time: Optional[np.ndarray] = None) -> SamplerOutput:
@@ -218,8 +250,7 @@ def merge_disjoint(outs: List[SamplerOutput]) -> SamplerOutput:
 
     Keeps a single shared null sink at slot 0; per-sample slots are offset.
     """
-    nodes, rows, cols, eids, seed_slots = [np.array([-1], np.int64)], [], [], [], []
-    offset = 1
+    seed_slots: List[int] = []
     n_hops = len(outs[0].num_sampled_nodes) - 1
     num_nodes = [1 + sum(o.num_sampled_nodes[0] - 1 for o in outs)]
     num_edges = [0] * n_hops
@@ -253,9 +284,6 @@ def merge_disjoint(outs: List[SamplerOutput]) -> SamplerOutput:
             per_hop_nodes[h].append(blk)
         if h > 0:
             num_nodes.append(sum(len(b) for b in per_hop_nodes[h][-len(outs):]))
-    cursor0 = 1 + sum(len(b) for b in per_hop_nodes[0])
-    # fix hop>=1 slot assignment started after all seeds: recompute cursor
-    # (slots assigned above already sequential; edges remap below)
     estarts = [np.cumsum([0] + o.num_sampled_edges) for o in outs]
     for h in range(n_hops):
         for oi, o in enumerate(outs):

@@ -128,6 +128,75 @@ def csr_to_ell_bucketed(indptr: np.ndarray, indices: np.ndarray, *,
     return buckets
 
 
+def ell_layout_from_bounds(bounds: Sequence[Tuple[int, int, int]], *,
+                           min_k: int = 4, block_rows: int = 8
+                           ) -> List[Tuple[np.ndarray, int]]:
+    """Static row ranges + degree bounds -> a fixed power-of-two K ladder.
+
+    ``bounds`` is ``[(start, stop, max_degree), ...]`` (e.g. the sampler's
+    static per-hop in-degree bounds). Each range is assigned the smallest
+    ladder rung ``K = min_k * 2**j >= max_degree``; ranges sharing a rung
+    merge into one bucket, and every bucket's row list is capacity-padded to
+    a ``block_rows`` multiple with ``-1`` row ids. The result depends only
+    on the *bounds* — never on realised degrees — so every packing against
+    it has identical shapes (the jit-ready layout).
+    """
+    by_k: dict = {}
+    for lo, hi, bound in bounds:
+        if hi <= lo or bound <= 0:
+            continue
+        k = min_k
+        while k < bound:
+            k *= 2
+        by_k.setdefault(k, []).append(np.arange(lo, hi))
+    layout = []
+    for k in sorted(by_k):
+        rows = np.concatenate(by_k[k]).astype(np.int32)
+        pad = -(-len(rows) // block_rows) * block_rows - len(rows)
+        if pad:
+            rows = np.concatenate([rows, np.full(pad, -1, np.int32)])
+        layout.append((rows, k))
+    return layout
+
+
+def csr_to_ell_static(indptr: np.ndarray, indices: np.ndarray,
+                      layout: Sequence[Tuple[np.ndarray, int]], *,
+                      block_rows: int = 8) -> List[EllBucket]:
+    """Pack a CSR/CSC into a *fixed* bucket layout (capacity-padded).
+
+    The shape-stable variant of :func:`csr_to_ell_bucketed`: bucket row sets
+    and K widths come from ``layout`` (see :func:`ell_layout_from_bounds`)
+    instead of the realised degree distribution, so every call returns
+    buckets of identical shapes — batches packed this way share one jit
+    trace. ``-1`` row ids are capacity padding (all-invalid slots; the
+    consumer masks them out of the scatter). A realised degree above its
+    bucket's K means the static bound was violated and raises.
+    """
+    indptr = np.asarray(indptr)
+    indices = np.asarray(indices)
+    deg_all = np.diff(indptr)
+    buckets: List[EllBucket] = []
+    for row_ids, k in layout:
+        row_ids = np.asarray(row_ids, np.int32)
+        valid = row_ids >= 0
+        safe = np.where(valid, row_ids, 0)
+        deg = np.where(valid, deg_all[safe], 0)
+        over = int(deg.max(initial=0))
+        if over > k:
+            raise ValueError(
+                f"static ELL layout violated: realised degree {over} exceeds "
+                f"bucket capacity K={k}")
+        starts = np.where(valid, indptr[safe], 0)
+        pos = _ell_positions(starts, deg, k, block_rows)
+        if len(pos) > len(row_ids):  # layout not block-padded: pad ids too
+            row_ids = np.concatenate([row_ids, np.full(
+                len(pos) - len(row_ids), -1, np.int32)])
+        safe_pos = np.where(pos >= 0, pos, 0)
+        ell_idx = np.where(pos >= 0, indices[safe_pos], -1).astype(np.int32)
+        buckets.append((row_ids, ell_idx, pos))
+    return buckets
+
+
 # The neighbor table rides scalar prefetch into SMEM on real TPUs, which is
 # KB-scale: bound the per-launch table and chunk the row dimension above it.
 # 64k int32 = 256 KB per launch; shapes are host-known so the chunk loop is
@@ -180,7 +249,9 @@ def spmm_ell_bucketed(buckets: Sequence[EllBucket], x: jnp.ndarray,
     ``weight`` is per-edge in CSR order (the order ``csr_to_ell_bucketed``
     packed from); each bucket gathers its slots' weights through ``ell_pos``.
     Rows absent from every bucket (degree 0) keep the 0 fill — identical to
-    the oracle's empty-segment convention for every reduce mode.
+    the oracle's empty-segment convention for every reduce mode. ``-1`` row
+    ids (capacity padding from :func:`csr_to_ell_static`) are masked out of
+    the scatter, so bucket arrays may be tracers (jit-argument batches).
     """
     out = jnp.zeros((num_rows,) + x.shape[1:], x.dtype)
     for row_ids, ell_idx, ell_pos in buckets:
@@ -192,6 +263,9 @@ def spmm_ell_bucketed(buckets: Sequence[EllBucket], x: jnp.ndarray,
                             0.0).astype(jnp.float32)
         res = spmm_ell(jnp.asarray(ell_idx), w_b, x, reduce=reduce,
                        force_pallas=force_pallas, interpret=interpret)
-        out = out.at[jnp.asarray(row_ids)].set(
-            res[: len(row_ids)].astype(x.dtype))
+        ids = jnp.asarray(row_ids)
+        # Padding ids scatter out of bounds and are dropped.
+        ids = jnp.where(ids >= 0, ids, num_rows)
+        out = out.at[ids].set(res[: ids.shape[0]].astype(x.dtype),
+                              mode="drop")
     return out

@@ -1,0 +1,234 @@
+"""Jit-ready loader batches: host-side cache pre-fill, static ELL layout,
+single-trace Pallas dispatch, and the satellite bugfixes.
+
+Covers the PR-2 chain:
+
+    NeighborLoader._make_batch (producer thread)
+      -> EdgeIndex.from_coo_prefilled (CSC/CSR + static ELL, host numpy)
+        -> jit'd step(batch) -> EdgeIndex.matmul -> spmm_ell_pallas
+           (one trace across batches; capacity-padded buckets)
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.edge_index import EdgeIndex
+from repro.core.message_passing import MessagePassing
+from repro.data.data import Data
+from repro.data.loader import Batch, NeighborLoader
+from repro.data.sampler import static_slot_bounds
+from repro.kernels.spmm import ops as spmm_ops, ref as spmm_ref
+
+
+def _data(rng, n=200, e=1200, feat=16):
+    return Data(x=rng.standard_normal((n, feat)).astype(np.float32),
+                edge_index=np.stack([rng.integers(0, n, e),
+                                     rng.integers(0, n, e)]),
+                y=rng.integers(0, 4, n))
+
+
+# --------------------------------------------------------- static ELL packing
+def test_static_slot_bounds_layout():
+    bounds = static_slot_bounds(8, [4, 3])
+    # seeds [1,9) bounded by fanout 4; hop-1 block [9,41) bounded by 3;
+    # hop-2 block receives nothing and is absent.
+    assert bounds == [(1, 9, 4), (9, 41, 3)]
+    layout = spmm_ops.ell_layout_from_bounds(bounds)
+    assert len(layout) == 1  # both ranges share the K=4 rung
+    rows, k = layout[0]
+    assert k == 4 and len(rows) % 8 == 0
+    assert set(rows[rows >= 0].tolist()) == set(range(1, 41))
+
+
+def test_csr_to_ell_static_matches_oracle(rng):
+    """Static-layout packing must aggregate identically to the CSR oracle
+    on the rows it covers, for every reduce mode."""
+    n_rows, n_cols = 23, 17
+    deg = rng.integers(0, 5, n_rows)
+    indptr = np.concatenate([[0], np.cumsum(deg)]).astype(np.int64)
+    indices = rng.integers(0, n_cols, int(indptr[-1])).astype(np.int32)
+    layout = spmm_ops.ell_layout_from_bounds([(0, n_rows, 6)])
+    buckets = spmm_ops.csr_to_ell_static(indptr, indices, layout)
+    (row_ids, ell_idx, pos), = buckets
+    assert len(row_ids) == len(ell_idx) == -(-n_rows // 8) * 8
+    assert (row_ids < 0).sum() == len(row_ids) - n_rows  # capacity pads
+    x = jnp.asarray(rng.standard_normal((n_cols, 128)).astype(np.float32))
+    w = rng.standard_normal(len(indices)).astype(np.float32)
+    for reduce in ("sum", "mean", "max", "min"):
+        a = spmm_ref.spmm_csr(jnp.asarray(indptr), jnp.asarray(indices), x,
+                              jnp.asarray(w), num_rows=n_rows, reduce=reduce)
+        b = spmm_ops.spmm_ell_bucketed(buckets, x, jnp.asarray(w),
+                                       num_rows=n_rows, reduce=reduce,
+                                       force_pallas=False)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                                   atol=1e-5)
+
+
+def test_csr_to_ell_static_shapes_fixed_across_inputs(rng):
+    """Two different degree realisations against one layout -> identical
+    bucket shapes (the no-recompile invariant)."""
+    layout = spmm_ops.ell_layout_from_bounds([(1, 9, 4), (9, 41, 3)])
+
+    def pack(seed):
+        r = np.random.default_rng(seed)
+        deg = np.concatenate([[0], r.integers(0, 4, 40), np.zeros(24, int)])
+        indptr = np.concatenate([[0], np.cumsum(deg)])
+        indices = r.integers(0, 65, int(indptr[-1])).astype(np.int32)
+        return spmm_ops.csr_to_ell_static(indptr, indices, layout)
+
+    a, b = pack(1), pack(2)
+    assert [(r.shape, i.shape, p.shape) for r, i, p in a] == \
+           [(r.shape, i.shape, p.shape) for r, i, p in b]
+
+
+def test_csr_to_ell_static_overflow_raises(rng):
+    indptr = np.array([0, 9])  # one row, degree 9
+    indices = np.zeros(9, np.int32)
+    layout = spmm_ops.ell_layout_from_bounds([(0, 1, 4)])  # K=4 < 9
+    with pytest.raises(ValueError, match="static ELL layout violated"):
+        spmm_ops.csr_to_ell_static(indptr, indices, layout)
+
+
+# ------------------------------------------------------- loader cache pre-fill
+def test_loader_prefills_caches_host_side(rng):
+    loader = NeighborLoader(_data(rng), _data(rng), num_neighbors=[4, 3],
+                            batch_size=8, prefill_ell=True)
+    it = iter(loader)
+    b1, b2 = next(it), next(it)
+    for b in (b1, b2):
+        ei = b.edge_index
+        assert ei._csr is not None and ei._csc is not None
+        assert ei._ell is not None and len(ei._ell) >= 1
+        # CSC is destination-sorted with a consistent permutation
+        colptr, row, perm = (np.asarray(t) for t in ei._csc)
+        np.testing.assert_array_equal(
+            np.asarray(ei.dst)[perm], np.sort(np.asarray(ei.dst)))
+        assert colptr[-1] == ei.num_edges
+    # identical pytree structure + shapes across batches
+    assert (jax.tree_util.tree_structure(b1)
+            == jax.tree_util.tree_structure(b2))
+    assert ([l.shape for l in jax.tree_util.tree_leaves(b1)]
+            == [l.shape for l in jax.tree_util.tree_leaves(b2)])
+
+
+def test_loader_prefill_off_by_default_on_cpu(rng, monkeypatch):
+    monkeypatch.setenv("REPRO_USE_PALLAS", "0")
+    b = next(iter(NeighborLoader(_data(rng), _data(rng), num_neighbors=[3],
+                                 batch_size=8)))
+    assert b.edge_index._csc is not None  # CSR/CSC always host-filled
+    assert b.edge_index._ell is None      # no ELL packing cost off-Pallas
+    monkeypatch.setenv("REPRO_USE_PALLAS", "1")
+    b = next(iter(NeighborLoader(_data(rng), _data(rng), num_neighbors=[3],
+                                 batch_size=8)))
+    assert b.edge_index._ell is not None  # env-driven default follows dispatch
+
+
+def test_loader_batch_matmul_parity(rng):
+    """Prefilled-cache matmul == oracle on the raw COO, all reduce modes."""
+    loader = NeighborLoader(_data(rng), _data(rng), num_neighbors=[4, 3],
+                            batch_size=8, prefill_ell=True)
+    b = next(iter(loader))
+    raw = EdgeIndex(b.edge_index.data, b.num_nodes, b.num_nodes)
+    for reduce in ("sum", "mean", "max", "min"):
+        fast = b.edge_index.matmul(b.x, reduce=reduce, force_pallas=True)
+        ref = raw.matmul(b.x, reduce=reduce, force_pallas=False)
+        np.testing.assert_allclose(np.asarray(fast), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_loader_batch_hits_pallas_single_trace(rng, monkeypatch):
+    """The acceptance path: prefetch-producer batches dispatch to the Pallas
+    ELL kernel inside jit, with ONE trace across two different batches."""
+    calls, traces = [], []
+    real = spmm_ops.spmm_ell_pallas
+    monkeypatch.setattr(spmm_ops, "spmm_ell_pallas",
+                        lambda *a, **k: (calls.append(1), real(*a, **k))[1])
+    loader = NeighborLoader(_data(rng), _data(rng), num_neighbors=[4, 3],
+                            batch_size=8, prefetch=2, prefill_ell=True)
+
+    @jax.jit
+    def step(batch):
+        traces.append(1)  # runs only while tracing
+        return batch.edge_index.matmul(batch.x, force_pallas=True)
+
+    it = iter(loader)
+    b1, b2 = next(it), next(it)
+    o1, o2 = step(b1), step(b2)
+    assert calls, "loader batch did not reach the Pallas ELL kernel"
+    assert len(traces) == 1, "second batch retraced: pytree not static"
+    for b, o in ((b1, o1), (b2, o2)):
+        raw = EdgeIndex(b.edge_index.data, b.num_nodes, b.num_nodes)
+        np.testing.assert_allclose(
+            np.asarray(o), np.asarray(raw.matmul(b.x, force_pallas=False)),
+            rtol=1e-4, atol=1e-4)
+
+
+def test_disjoint_loader_batches_jit_ready(rng):
+    loader = NeighborLoader(_data(rng, n=60, e=400), _data(rng, n=60, e=400),
+                            num_neighbors=[3, 2], batch_size=6,
+                            disjoint=True, prefill_ell=True)
+    b = next(iter(loader))
+    assert b.edge_index._ell is not None
+    fast = b.edge_index.matmul(b.x, force_pallas=True)
+    raw = EdgeIndex(b.edge_index.data, b.num_nodes, b.num_nodes)
+    np.testing.assert_allclose(np.asarray(fast),
+                               np.asarray(raw.matmul(b.x)),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_batch_is_pytree_roundtrip(rng):
+    b = next(iter(NeighborLoader(_data(rng), _data(rng), num_neighbors=[3],
+                                 batch_size=8)))
+    leaves, treedef = jax.tree_util.tree_flatten(b)
+    b2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(b2, Batch)
+    assert b2.num_sampled_nodes == b.num_sampled_nodes
+    np.testing.assert_array_equal(np.asarray(b2.n_id), np.asarray(b.n_id))
+
+
+# -------------------------------------------------------- satellite bugfixes
+def test_from_coo_tracer_needs_node_counts(rng):
+    src = jnp.asarray(rng.integers(0, 10, 30), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, 10, 30), jnp.int32)
+
+    @jax.jit
+    def f(s, d):
+        return EdgeIndex.from_coo(s, d).data
+
+    with pytest.raises(ValueError, match="num_src_nodes/num_dst_nodes"):
+        f(src, dst)
+    # explicit counts still work under tracing
+    @jax.jit
+    def g(s, d):
+        return EdgeIndex.from_coo(s, d, 10, 10).data
+
+    np.testing.assert_array_equal(np.asarray(g(src, dst)),
+                                  np.stack([np.asarray(src),
+                                            np.asarray(dst)]))
+
+
+def test_target_to_source_uses_fused_transpose(rng, monkeypatch):
+    """t2s flow must dispatch to matmul(transpose=True), not edge-level
+    materialisation, and agree with it numerically."""
+    seen = []
+    real = EdgeIndex.matmul
+    monkeypatch.setattr(
+        EdgeIndex, "matmul",
+        lambda self, x, **kw: (seen.append(kw.get("transpose", False)),
+                               real(self, x, **kw))[1])
+    n, e = 30, 110
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    x = jnp.asarray(rng.standard_normal((n, 8)).astype(np.float32))
+    ei = EdgeIndex.from_coo(src, dst, n, n)
+    for aggr in ("sum", "mean", "max", "min"):
+        mp = MessagePassing(aggr=aggr, flow="target_to_source")
+        fused = mp.propagate({}, ei, x)
+        raw = mp.propagate({}, ei.data, x, num_nodes=n)
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(raw),
+                                   rtol=1e-5, atol=1e-5)
+    assert seen and all(seen), "t2s did not take the transpose SpMM path"
