@@ -2,6 +2,8 @@
 
 from __future__ import annotations
 
+import json
+import os
 import time
 from typing import Callable, Tuple
 
@@ -40,3 +42,18 @@ def synthetic_graph(num_nodes: int, avg_degree: int, feat: int,
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def append_cell(out_path: str, rec: dict) -> None:
+    """Replace ``rec['cell']``'s record in a JSON trajectory file, keeping
+    every other record (the per-PR perf-trajectory convention of
+    ``BENCH_spmm.json``)."""
+    records = []
+    if os.path.exists(out_path):
+        with open(out_path) as fh:
+            records = [r for r in json.load(fh)
+                       if r.get("cell") != rec["cell"]]
+    records.append(rec)
+    with open(out_path, "w") as fh:
+        json.dump(records, fh, indent=2)
+    print(f"# wrote {os.path.abspath(out_path)} (+ {rec['cell']} cell)")

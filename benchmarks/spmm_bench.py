@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, time_fn
+from benchmarks.common import append_cell, emit, time_fn
 from repro.kernels.spmm import ops as spmm_ops, ref as spmm_ref
 
 # (rows, K, F) cells. K is the padded neighbor budget per row.
@@ -220,18 +220,132 @@ def run_loader_step(out_path: str = "BENCH_spmm.json") -> None:
     emit("spmm/loader_step/cached_us", cached_us,
          f"vs_raw={raw_us / cached_us:.2f}x")
     emit("spmm/loader_step/make_batch_us", make_batch_us)
+    append_cell(out_path, rec)
 
-    records = []
-    if os.path.exists(out_path):
-        with open(out_path) as fh:
-            records = [r for r in json.load(fh)
-                       if r.get("cell") != "loader_step"]
-    records.append(rec)
-    with open(out_path, "w") as fh:
-        json.dump(records, fh, indent=2)
-    print(f"# wrote {os.path.abspath(out_path)} (+ loader_step cell)")
+
+def run_hetero_step(out_path: str = "BENCH_spmm.json") -> None:
+    """Typed loader -> jit'd HeteroGNN train-step cell (the PR-3 path).
+
+    Measures the heterogeneous serving chain at parity with the
+    homogeneous one: a ``HeteroNeighborLoader`` batch (per-relation
+    host-prefilled CSR/CSC + static ELL caches) flows through a jit'd
+    2-layer ``HeteroGNN`` as ONE pytree with a single compilation across
+    batches, per-relation SpMM aggregations and a single grouped matmul for
+    all per-type projections per layer — timed against the ungrouped
+    (|edge types| separate convs) variant. Also proves every relation's
+    Pallas ELL dispatch on a small forced-interpret cell. Appends a
+    ``hetero_step`` record to ``BENCH_spmm.json``.
+    """
+    import time
+
+    from repro.core.edge_index import EdgeIndex
+    from repro.core.hetero import to_hetero
+    from repro.data.data import HeteroData
+    from repro.data.hetero_sampler import HeteroNeighborLoader
+    from repro.nn.gnn.conv import SAGEConv
+
+    rng = np.random.default_rng(13)
+    n_user, n_item, e, feat, hidden = 2048, 4096, 32768, 64, 32
+    batch_size = 32
+    fan = {("user", "buys", "item"): [8, 4],
+           ("item", "rev_buys", "user"): [8, 4]}
+    hd = HeteroData()
+    hd.add_nodes("user", rng.standard_normal((n_user, feat)).astype(
+        np.float32))
+    hd.add_nodes("item", rng.standard_normal((n_item, feat)).astype(
+        np.float32))
+    ub = np.stack([rng.integers(0, n_user, e), rng.integers(0, n_item, e)])
+    hd.add_edges(("user", "buys", "item"), ub)
+    hd.add_edges(("item", "rev_buys", "user"), ub[::-1])
+    metadata = (["user", "item"], list(fan))
+
+    def make_loader(**kw):
+        return HeteroNeighborLoader(
+            hd, hd, num_neighbors=fan, input_type="item",
+            input_nodes=np.arange(n_item), batch_size=batch_size,
+            shuffle=True, prefill_ell=True, seed=0, **kw)
+
+    net = to_hetero(lambda i, o: SAGEConv(i, o), metadata,
+                    [feat, hidden, 4], grouped=True)
+    net_sep = to_hetero(lambda i, o: SAGEConv(i, o), metadata,
+                        [feat, hidden, 4], grouped=False)
+    params = net.init(jax.random.PRNGKey(0))
+    traces = []
+
+    def make_step(model, counter=None):
+        @jax.jit
+        def step(params, batch):
+            if counter is not None:
+                counter.append(1)  # trace counter: must stay at 1
+
+            def loss_fn(p):
+                out = model.apply(p, batch.x_dict, batch.edge_index_dict,
+                                  batch.num_nodes_dict)
+                return (batch.seed_output(out) ** 2).mean()
+
+            return jax.value_and_grad(loss_fn)(params)
+
+        return step
+
+    step_grouped = make_step(net, traces)
+    step_sep = make_step(net_sep)
+
+    t0 = time.perf_counter()
+    it = iter(make_loader(prefetch=2))
+    batches = [next(it) for _ in range(4)]
+    make_batch_us = (time.perf_counter() - t0) / 4 * 1e6
+
+    step_grouped(params, batches[0])[0].block_until_ready()
+    step_sep(params, batches[0])[0].block_until_ready()
+
+    def time_over_batches(fn, rounds: int = 3):
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            for b in batches:
+                fn(params, b)[0].block_until_ready()
+        return (time.perf_counter() - t0) / (rounds * len(batches)) * 1e6
+
+    grouped_us = time_over_batches(step_grouped)
+    sep_us = time_over_batches(step_sep)
+    assert len(traces) == 1, f"recompiled across batches: {len(traces)}"
+
+    # every relation's aggregation -> Pallas ELL kernel, proven on a tiny
+    # forced-interpret cell (compiled on real TPUs)
+    on_tpu = jax.default_backend() == "tpu"
+    small = next(iter(HeteroNeighborLoader(
+        hd, hd, num_neighbors={et: [3, 2] for et in fan}, input_type="item",
+        input_nodes=np.arange(8), batch_size=8, prefill_ell=True, seed=0)))
+    key = "hetero_pallas_us" if on_tpu else "hetero_pallas_interpret_us"
+    pallas_us = {}
+    for et, ei in small.edge_index_dict.items():
+        spmm = jax.jit(lambda b, e=et: b.edge_index_dict[e].matmul(
+            b.x_dict[e[0]], force_pallas=True))
+        got = spmm(small)
+        ref = EdgeIndex(ei.data, ei.num_src_nodes, ei.num_dst_nodes).matmul(
+            small.x_dict[et[0]], force_pallas=False)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
+        pallas_us["__".join(et)] = time_fn(spmm, small, warmup=1, iters=3)
+
+    rec = {
+        "cell": "hetero_step",
+        "backend": jax.default_backend(),
+        "n_user": n_user, "n_item": n_item, "edges_per_type": e,
+        "feat": feat, "batch_size": batch_size,
+        "fanouts": {"__".join(et): f for et, f in fan.items()},
+        "make_batch_us": make_batch_us,
+        "step_grouped_us": grouped_us,
+        "step_separate_us": sep_us,
+        "trace_count": len(traces),
+        key: pallas_us,
+    }
+    emit("spmm/hetero_step/grouped_us", grouped_us,
+         f"vs_separate={sep_us / grouped_us:.2f}x")
+    emit("spmm/hetero_step/make_batch_us", make_batch_us)
+    append_cell(out_path, rec)
 
 
 if __name__ == "__main__":
     run()
     run_loader_step()
+    run_hetero_step()

@@ -54,6 +54,12 @@ class EdgeIndex:
                      the CSC (forward) / CSR (transpose) adjacency — tuples of
                      (row_ids, ell_idx, ell_pos) buckets feeding the Pallas
                      pipelined SpMM kernel.
+      _ell_trimmed:  static marker set by ``trim_to_layer``: the ELL cache
+                     was inherited from an untrimmed parent, so its
+                     ``ell_pos`` slots index the *parent's* CSC edge order.
+                     Unweighted matmuls still take the Pallas path; weighted
+                     ones fall back to the oracle (a per-edge gather through
+                     stale positions would be silently wrong).
     """
 
     data: jnp.ndarray
@@ -65,19 +71,21 @@ class EdgeIndex:
     _csc: Optional[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]] = None
     _ell: Optional[Tuple] = None
     _ell_t: Optional[Tuple] = None
+    _ell_trimmed: bool = False
 
     # ------------------------------------------------------------------ pytree
     def tree_flatten(self):
         children = (self.data, self._csr, self._csc, self._ell, self._ell_t)
         aux = (self.num_src_nodes, self.num_dst_nodes, self.sort_order,
-               self.is_undirected)
+               self.is_undirected, self._ell_trimmed)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         data, csr, csc, ell, ell_t = children
-        ns, nd, so, undirected = aux
-        return cls(data, ns, nd, so, undirected, csr, csc, ell, ell_t)
+        ns, nd, so, undirected, ell_trimmed = aux
+        return cls(data, ns, nd, so, undirected, csr, csc, ell, ell_t,
+                   ell_trimmed)
 
     # ------------------------------------------------------------- constructors
     @classmethod
@@ -294,9 +302,15 @@ class EdgeIndex:
         take_pallas = use_pallas() if force_pallas is None else force_pallas
         if take_pallas:
             ell = self.get_ell(transpose=transpose)
-            if ell is not None:
-                _, _, perm = (self.get_csr() if transpose else self.get_csc())
-                w = None if edge_weight is None else edge_weight[perm]
+            # A trimmed (inherited) ELL cache has stale edge positions: it
+            # serves unweighted matmuls only; weighted ones take the oracle.
+            if ell is not None and (edge_weight is None
+                                    or not self._ell_trimmed):
+                w = None
+                if edge_weight is not None:
+                    _, _, perm = (self.get_csr() if transpose
+                                  else self.get_csc())
+                    w = edge_weight[perm]
                 return spmm_ops.spmm_ell_bucketed(
                     ell, x, w, num_rows=num_rows, reduce=reduce,
                     force_pallas=take_pallas, interpret=interpret)

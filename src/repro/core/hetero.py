@@ -7,9 +7,18 @@ homogeneous GNN per edge type (the torch.fx transform of the paper, done
 here by functional replication — parameters are duplicated per relation and
 the computation graph rewired to bipartite propagate + group aggregation).
 
-``GroupedLinear`` exposes the paper's {H_T W_T} grouped projection backed by
-the grouped-matmul Pallas kernel (kernels/grouped_matmul) — the same
-primitive the MoE experts use (DESIGN.md §4).
+The serving path is *grouped*: when every replicated conv decomposes into
+aggregate-then-project (``fused_projections``, e.g. ``SAGEConv``),
+``HeteroConv`` runs each relation's aggregation as one SpMM (the blocked-ELL
+Pallas fast path when the ``EdgeIndex`` carries a prefilled cache) and then
+batches ALL per-relation projections — neighbor and root weights of every
+edge type — into a single grouped matmul (one MXU launch instead of
+2·|edge types| GEMMs), the same {H_T W_T} primitive the MoE experts use
+(``kernels/grouped_matmul``, DESIGN.md §4). Cross-type aggregation
+accumulates in place instead of materialising a stacked tensor.
+
+``GroupedLinear`` exposes the raw {H_T W_T} grouped projection for callers
+that manage their own per-type features.
 """
 
 from __future__ import annotations
@@ -22,10 +31,14 @@ import numpy as np
 
 from repro.core.edge_index import EdgeIndex
 from repro.core.message_passing import MessagePassing
+from repro.core.trim import trim_to_layer_hetero
+from repro.kernels import use_pallas
 from repro.kernels.grouped_matmul import ops as gmm_ops
 from repro.nn.module import Module, glorot_uniform
 
 EdgeType = Tuple[str, str, str]
+
+_CROSS_TYPE_AGGRS = ("sum", "mean", "max", "min", "cat")
 
 
 def _et_key(et: EdgeType) -> str:
@@ -33,17 +46,107 @@ def _et_key(et: EdgeType) -> str:
 
 
 class HeteroConv(Module):
-    """One hetero layer: a conv per edge type + cross-type aggregation."""
+    """One hetero layer: a conv per edge type + cross-type aggregation.
+
+    ``aggr`` must be one of ``sum | mean | max | min | cat`` (``"cat"`` is
+    the explicit concatenation mode; unknown strings raise instead of
+    silently concatenating). ``grouped=None`` auto-selects the grouped
+    projection path when Pallas dispatch is on (TPU backend or
+    ``REPRO_USE_PALLAS=1`` — on CPU/GPU, |T| separate XLA GEMMs beat a
+    ragged grouped dot) and every participating conv exposes
+    ``fused_projections`` with uniform weight shapes over ``EdgeIndex``
+    inputs; ``True``/``False`` force it on/off.
+    """
 
     def __init__(self, convs: Dict[EdgeType, MessagePassing],
-                 aggr: str = "sum"):
+                 aggr: str = "sum", grouped: Optional[bool] = None):
+        if aggr not in _CROSS_TYPE_AGGRS:
+            raise ValueError(
+                f"HeteroConv: unknown cross-type aggr '{aggr}'; expected one "
+                f"of {_CROSS_TYPE_AGGRS} (use 'cat' for concatenation)")
         self.convs = convs
         self.aggr = aggr
+        self.grouped = grouped
 
     def init(self, key):
         keys = jax.random.split(key, len(self.convs))
         return {_et_key(et): conv.init(k)
                 for (et, conv), k in zip(self.convs.items(), keys)}
+
+    # ---------------------------------------------------------------- grouped
+    def _grouped_projections(self, params, ets, edge_index_dict, kwargs):
+        """Per-edge-type (w_neigh, b_neigh, w_root, b_root), or ``None``
+        when the grouped path does not apply (custom messages / raw edge
+        arrays / non-uniform weight shapes / extra propagate kwargs)."""
+        if kwargs or not ets or (self.grouped is False):
+            return None
+        if self.grouped is None and not use_pallas():
+            return None
+        proj = {}
+        for et in ets:
+            conv = self.convs[et]
+            if not (hasattr(conv, "fused_projections")
+                    and conv._message_is_default()
+                    and getattr(conv.aggr, "name", None)
+                    in ("sum", "mean", "max", "min")
+                    and isinstance(edge_index_dict[et], EdgeIndex)):
+                return None
+            proj[et] = conv.fused_projections(params[_et_key(et)])
+        if len({(p[0].shape, p[2].shape) for p in proj.values()}) != 1:
+            return None
+        return proj
+
+    def _apply_grouped(self, params, proj, ets, x_dict, edge_index_dict
+                       ) -> Dict[str, List[jnp.ndarray]]:
+        """Aggregate per relation (SpMM fast path), then project every
+        relation's neighbor AND root features in ONE grouped matmul."""
+        # 1. per-edge-type aggregation of *raw* source features — each call
+        #    dispatches through EdgeIndex.matmul (Pallas ELL when cached)
+        aggs = [self.convs[et].propagate(
+            {}, edge_index_dict[et], (x_dict[et[0]], x_dict[et[2]]))
+            for et in ets]
+        roots = [x_dict[et[2]] for et in ets]
+        # 2. one grouped GEMM over 2·|E| groups: [agg_et...] + [x_dst_et...]
+        chunks = aggs + roots
+        sizes = [c.shape[0] for c in chunks]
+        w = jnp.stack([proj[et][0] for et in ets]
+                      + [proj[et][2] for et in ets])
+        # group sizes are static shape facts — keep them host-side so the
+        # packer can make shape decisions under tracing
+        out = gmm_ops.grouped_matmul(
+            jnp.concatenate(chunks, axis=0), w,
+            np.asarray(sizes, np.int32),
+            interpret=jax.default_backend() != "tpu")
+        parts, off = [], 0
+        for s in sizes:
+            parts.append(out[off:off + s])
+            off += s
+        # 3. per-relation output = projected neighbors + projected root
+        grouped: Dict[str, List[jnp.ndarray]] = {}
+        for i, et in enumerate(ets):
+            o = parts[i] + parts[len(ets) + i]
+            for b in (proj[et][1], proj[et][3]):
+                if b is not None:
+                    o = o + b
+            grouped.setdefault(et[2], []).append(o)
+        return grouped
+
+    # ------------------------------------------------------------ aggregation
+    def _cross_type_reduce(self, outs: List[jnp.ndarray]) -> jnp.ndarray:
+        """Accumulate-in-place across edge types (no stacked temporary)."""
+        if self.aggr == "cat":
+            return jnp.concatenate(outs, axis=-1)
+        acc = outs[0]
+        for o in outs[1:]:
+            if self.aggr == "max":
+                acc = jnp.maximum(acc, o)
+            elif self.aggr == "min":
+                acc = jnp.minimum(acc, o)
+            else:
+                acc = acc + o
+        if self.aggr == "mean":
+            acc = acc / len(outs)
+        return acc
 
     def apply(self, params, x_dict: Dict[str, jnp.ndarray],
               edge_index_dict: Dict[EdgeType, jnp.ndarray],
@@ -51,28 +154,24 @@ class HeteroConv(Module):
               **kwargs) -> Dict[str, jnp.ndarray]:
         if num_nodes_dict is None:
             num_nodes_dict = {t: x.shape[0] for t, x in x_dict.items()}
-        grouped: Dict[str, List[jnp.ndarray]] = {}
-        for et, conv in self.convs.items():
-            if et not in edge_index_dict:
-                continue
-            src_t, _, dst_t = et
-            out = conv.apply(
-                params[_et_key(et)],
-                (x_dict[src_t], x_dict[dst_t]),
-                edge_index_dict[et],
-                num_nodes=num_nodes_dict[dst_t], **kwargs)
-            grouped.setdefault(dst_t, []).append(out)
-        out_dict = {}
-        for dst_t, outs in grouped.items():
-            stacked = jnp.stack(outs)
-            if self.aggr == "sum":
-                out_dict[dst_t] = stacked.sum(0)
-            elif self.aggr == "mean":
-                out_dict[dst_t] = stacked.mean(0)
-            elif self.aggr == "max":
-                out_dict[dst_t] = stacked.max(0)
-            else:
-                out_dict[dst_t] = jnp.concatenate(outs, axis=-1)
+        ets = [et for et in self.convs if et in edge_index_dict]
+        proj = self._grouped_projections(params, ets, edge_index_dict,
+                                         kwargs)
+        if proj is not None:
+            grouped = self._apply_grouped(params, proj, ets, x_dict,
+                                          edge_index_dict)
+        else:
+            grouped = {}
+            for et in ets:
+                src_t, _, dst_t = et
+                out = self.convs[et].apply(
+                    params[_et_key(et)],
+                    (x_dict[src_t], x_dict[dst_t]),
+                    edge_index_dict[et],
+                    num_nodes=num_nodes_dict[dst_t], **kwargs)
+                grouped.setdefault(dst_t, []).append(out)
+        out_dict = {dst_t: self._cross_type_reduce(outs)
+                    for dst_t, outs in grouped.items()}
         # node types with no incoming edges keep their features (valid only
         # when dims already match — otherwise the caller needs reverse edge
         # types, the PyG ToUndirected idiom)
@@ -89,18 +188,26 @@ class HeteroConv(Module):
 
 
 class HeteroGNN(Module):
-    """``to_hetero``'d stack: every layer replicated over all edge types."""
+    """``to_hetero``'d stack: every layer replicated over all edge types.
+
+    Supports layer-wise trimming of hetero BFS subgraphs (paper C8): with
+    ``trim=True`` and the sampler's per-type/per-relation budgets, each
+    layer statically slices nodes, edges and the per-relation static-layout
+    ELL caches (``trim_to_layer_hetero``), keeping the Pallas fast path on
+    inner hops.
+    """
 
     def __init__(self, make_conv: Callable[[int, int], MessagePassing],
                  metadata: Tuple[Sequence[str], Sequence[EdgeType]],
                  dims: Sequence[int], aggr: str = "sum",
-                 act=jax.nn.relu):
+                 act=jax.nn.relu, grouped: Optional[bool] = None):
         node_types, edge_types = metadata
         self.node_types = list(node_types)
         self.edge_types = list(edge_types)
         self.layers = [
             HeteroConv({et: make_conv(dims[i], dims[i + 1])
-                        for et in self.edge_types}, aggr=aggr)
+                        for et in self.edge_types}, aggr=aggr,
+                       grouped=grouped)
             for i in range(len(dims) - 1)]
         self.act = act
 
@@ -110,8 +217,24 @@ class HeteroGNN(Module):
                 for i, (l, k) in enumerate(zip(self.layers, keys))}
 
     def apply(self, params, x_dict, edge_index_dict,
-              num_nodes_dict=None, **kwargs):
+              num_nodes_dict=None,
+              num_sampled_nodes_dict=None, num_sampled_edges_dict=None,
+              trim: bool = False, **kwargs):
+        do_trim = trim and num_sampled_nodes_dict is not None
+        if do_trim and num_sampled_edges_dict is None:
+            raise ValueError(
+                "HeteroGNN.apply(trim=True) needs num_sampled_edges_dict "
+                "alongside num_sampled_nodes_dict (the sampler's per-hop "
+                "edge budgets drive the per-relation slicing)")
         for i, layer in enumerate(self.layers):
+            # layer 0 sees the untrimmed graph by construction — skipping
+            # its no-op trim keeps the loader-prefilled CSR/CSC/ELL caches
+            # (and the weighted fast path) on the outermost, largest layer
+            if do_trim and i > 0:
+                x_dict, edge_index_dict = trim_to_layer_hetero(
+                    i, num_sampled_nodes_dict, num_sampled_edges_dict,
+                    x_dict, edge_index_dict)
+                num_nodes_dict = {t: x.shape[0] for t, x in x_dict.items()}
             x_dict = layer.apply(params[f"layer{i}"], x_dict,
                                  edge_index_dict, num_nodes_dict, **kwargs)
             if i < len(self.layers) - 1:
@@ -120,9 +243,10 @@ class HeteroGNN(Module):
 
 
 def to_hetero(make_conv: Callable[[int, int], MessagePassing],
-              metadata, dims: Sequence[int], aggr: str = "sum") -> HeteroGNN:
+              metadata, dims: Sequence[int], aggr: str = "sum",
+              grouped: Optional[bool] = None) -> HeteroGNN:
     """Replicate a homogeneous conv constructor across all edge types."""
-    return HeteroGNN(make_conv, metadata, dims, aggr=aggr)
+    return HeteroGNN(make_conv, metadata, dims, aggr=aggr, grouped=grouped)
 
 
 class GroupedLinear(Module):

@@ -7,11 +7,20 @@ ordering on the fly ("zero-copy"). Here the sampler emits *budgeted, padded*
 hops (static per-hop sizes), so trimming is a **static** ``lax.slice`` — free
 at trace time, fused by XLA, and crucially shape-stable so the jit cache
 never misses. This is the TPU/XLA rendition of the paper's zero-copy narrow.
+
+Trimming no longer drops a loader-prefilled static-layout ELL cache: every
+slot's in-edges come from exactly one hop (a block is the frontier exactly
+once), so the trimmed graph's ELL is the parent's with the rows of
+dropped-hop slots masked to capacity padding — a shape-stable elementwise
+``where`` that works on tracers, keeping the Pallas SpMM fast path on inner
+layers (see ``_trim_ell``). ``trim_to_layer_hetero`` applies the same
+per-(node type, edge type) — deep hetero GNNs keep every relation on the
+fast path as they trim.
 """
 
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 
@@ -33,6 +42,39 @@ def trim_sizes(num_nodes_per_hop: Sequence[int],
     return n_nodes, n_edges
 
 
+def _trim_ell(ell, boundary: int):
+    """Mask a static-layout bucketed ELL down to slots that keep edges.
+
+    ``boundary`` is the first slot whose in-edges are dropped (hop-``h``
+    edges always point into the hop ``h-1`` block, so kept slots form a
+    prefix). Rows at/past the boundary become capacity padding (``-1`` row
+    ids, all-invalid neighbor slots) — shapes are unchanged, so this is
+    jit-stable and valid on tracer leaves. ``ell_pos`` is masked too but
+    still indexes the *parent's* CSC edge order; the trimmed cache is
+    therefore marked ``_ell_trimmed`` and only serves unweighted matmuls.
+    """
+    if ell is None:
+        return None
+    trimmed = []
+    for row_ids, ell_idx, ell_pos in ell:
+        keep = (row_ids >= 0) & (row_ids < boundary)
+        trimmed.append((jnp.where(keep, row_ids, -1),
+                        jnp.where(keep[:, None], ell_idx, -1),
+                        jnp.where(keep[:, None], ell_pos, -1)))
+    return tuple(trimmed)
+
+
+def _trim_edge_index(edge_index: EdgeIndex, n_src: int, n_dst: int,
+                     n_edges: int, recv_boundary: int) -> EdgeIndex:
+    """Static COO slice + ELL mask; CSR/CSC caches are dropped (their edge
+    dimension is data-dependent after a trim) and re-derived on demand."""
+    return EdgeIndex(
+        edge_index.data[:, :n_edges], n_src, n_dst,
+        edge_index.sort_order, edge_index.is_undirected,
+        _ell=_trim_ell(edge_index._ell, recv_boundary),
+        _ell_trimmed=edge_index._ell is not None or edge_index._ell_trimmed)
+
+
 def trim_to_layer(layer: int, num_nodes_per_hop: Sequence[int],
                   num_edges_per_hop: Sequence[int], x: jnp.ndarray,
                   edge_index, edge_attr: Optional[jnp.ndarray] = None):
@@ -40,15 +82,54 @@ def trim_to_layer(layer: int, num_nodes_per_hop: Sequence[int],
 
     Requires BFS ordering: node slots grouped by hop (seeds first), edge
     slots grouped by the hop that discovered them — exactly what
-    ``repro.data.sampler`` produces. All sizes static -> jit-stable.
+    ``repro.data.sampler`` produces. All sizes static -> jit-stable. A
+    prefilled static-layout ELL cache survives the trim (masked, see
+    ``_trim_ell``), so trimmed inner layers still hit the Pallas kernel.
     """
     n_nodes, n_edges = trim_sizes(num_nodes_per_hop, num_edges_per_hop, layer)
     x_t = x[:n_nodes]
     if isinstance(edge_index, EdgeIndex):
-        ei_t = EdgeIndex(edge_index.data[:, :n_edges], n_nodes, n_nodes,
-                         edge_index.sort_order, edge_index.is_undirected)
+        keep_hops = len(num_edges_per_hop) - layer
+        recv = int(sum(num_nodes_per_hop[:keep_hops]))
+        ei_t = _trim_edge_index(edge_index, n_nodes, n_nodes, n_edges, recv)
     else:
         ei_t = edge_index[:, :n_edges]
     if edge_attr is not None:
         return x_t, ei_t, edge_attr[:n_edges]
     return x_t, ei_t, None
+
+
+def trim_to_layer_hetero(
+        layer: int,
+        num_nodes_dict: Dict[str, Sequence[int]],
+        num_edges_dict: Dict[Tuple[str, str, str], Sequence[int]],
+        x_dict: Dict[str, jnp.ndarray],
+        edge_index_dict: Dict[Tuple[str, str, str], jnp.ndarray],
+        edge_attr_dict: Optional[Dict] = None):
+    """Heterogeneous layer-wise trim: per node type and per edge type.
+
+    ``num_nodes_dict``/``num_edges_dict`` are the hetero sampler's per-hop
+    budgets. Each relation's edges are sliced by its own hop counts; the
+    node/ELL boundaries come from its endpoint types. Per-relation
+    static-layout ELL caches survive as masked caches (the hetero fast
+    path on inner layers).
+    """
+    depth = len(next(iter(num_edges_dict.values())))
+    keep = depth - layer
+    n_nodes = {t: int(sum(v[:keep + 1])) for t, v in num_nodes_dict.items()}
+    recv = {t: int(sum(v[:keep])) for t, v in num_nodes_dict.items()}
+    x_t = {t: x[:n_nodes[t]] for t, x in x_dict.items()}
+    ei_t = {}
+    for et, ei in edge_index_dict.items():
+        n_e = int(sum(num_edges_dict[et][:keep]))
+        if isinstance(ei, EdgeIndex):
+            ei_t[et] = _trim_edge_index(ei, n_nodes[et[0]], n_nodes[et[2]],
+                                        n_e, recv[et[2]])
+        else:
+            ei_t[et] = ei[:, :n_e]
+    if edge_attr_dict is not None:
+        attr_t = {et: (None if a is None
+                       else a[:int(sum(num_edges_dict[et][:keep]))])
+                  for et, a in edge_attr_dict.items()}
+        return x_t, ei_t, attr_t
+    return x_t, ei_t

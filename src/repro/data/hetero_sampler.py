@@ -2,8 +2,12 @@
 
 PyG's C++ sampler multi-threads *across edge types* per hop; the vectorised
 analogue processes every edge type's frontier expansion as one NumPy pass
-per (hop, edge type). Budgets are static per (hop, edge type), so batches
-are shape-stable per node/edge type — the hetero mini-batch feeds a jit'd
+per (hop, edge type) — the same persistent global->slot lookup dedup as the
+homogeneous sampler, no per-edge Python. Budgets are static per (hop, edge
+type), so batches are shape-stable per node/edge type and every slot's
+in-degree is statically bounded by the fanout of the (hop, edge type) that
+expands it (``hetero_static_slot_bounds``) — which is what lets the loader
+pre-pack a *static-layout* blocked-ELL cache per relation and feed a jit'd
 HeteroGNN without recompiles.
 
 Output layout per node type mirrors the homogeneous sampler: slot 0 is a
@@ -12,6 +16,12 @@ typed null sink, then seed slots (for seed types), then one block per
 that type's store carries timestamps; types without timestamps sample
 unconstrained — exactly the paper's "node and edge types lacking timestamps
 ... sampling is performed without applying temporal constraints".
+
+``HeteroNeighborLoader`` rides the shared producer-thread/prefetch
+machinery of ``repro.data.loader`` and emits registered-pytree
+``HeteroBatch``es whose per-edge-type graphs carry host-built CSR/CSC (and,
+when Pallas dispatch is on, static-layout bucketed ELL) caches — one jit
+trace across batches, every relation's aggregation on the Pallas SpMM path.
 """
 
 from __future__ import annotations
@@ -19,10 +29,16 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro.core.edge_index import EdgeIndex
 from repro.data.graph_store import EdgeType, GraphStore
+from repro.data.loader import _PrefetchLoader
 from repro.data.sampler import _pick_neighbors
+from repro.kernels import use_pallas
+from repro.kernels.spmm.ops import ell_layout_from_bounds
 
 
 @dataclasses.dataclass
@@ -35,6 +51,47 @@ class HeteroSamplerOutput:
     num_sampled_edges: Dict[EdgeType, List[int]]
     seed_slots: np.ndarray
     seed_type: str
+
+
+def hetero_static_slot_bounds(
+        batch_size: int, num_neighbors: Dict[EdgeType, Sequence[int]],
+        seed_type: str) -> Dict[EdgeType, List[Tuple[int, int, int]]]:
+    """Static per-edge-type dst-slot in-degree bounds of a typed batch.
+
+    The hetero slot layout is fixed by the budgets: per node type, slot 0 is
+    the null sink, seeds occupy ``[1, 1+B)`` (seed type only), then one block
+    per hop sized by the sum of that type's incoming expansion budgets. Hop
+    ``h`` edges of type ``et`` always point *into* the dst type's current
+    frontier block, at most ``fanout[et][h]`` per slot — the heterogeneous
+    counterpart of ``repro.data.sampler.static_slot_bounds``.
+
+    Returns, per edge type, ``[(start, stop, max_in_degree), ...]`` row
+    ranges in the *destination type's* slot space (disjoint across hops),
+    ready for ``ell_layout_from_bounds``.
+    """
+    edge_types = list(num_neighbors)
+    node_types = sorted({t for et in edge_types for t in (et[0], et[2])}
+                        | {seed_type})
+    depth = len(next(iter(num_neighbors.values())))
+    num_nodes = {t: [1 + (batch_size if t == seed_type else 0)]
+                 for t in node_types}
+    front = {t: ((1, 1 + batch_size) if t == seed_type else (1, 1))
+             for t in node_types}
+    bounds: Dict[EdgeType, List[Tuple[int, int, int]]] = {
+        et: [] for et in edge_types}
+    for hop in range(depth):
+        budget = {t: 0 for t in node_types}
+        for et in edge_types:
+            fanout = num_neighbors[et][hop]
+            lo, hi = front[et[2]]
+            if fanout > 0 and hi > lo:
+                bounds[et].append((lo, hi, fanout))
+            budget[et[0]] += (hi - lo) * fanout
+        for t in node_types:
+            start = sum(num_nodes[t])
+            num_nodes[t].append(budget[t])
+            front[t] = (start, start + budget[t])
+    return bounds
 
 
 class HeteroNeighborSampler:
@@ -54,17 +111,37 @@ class HeteroNeighborSampler:
         # incoming adjacency per edge type: sample edges pointing INTO the
         # frontier of the edge type's dst type
         self.rev = {et: graph_store.get_rev_csr(et) for et in self.edge_types}
+        self.node_types = sorted(
+            {t for et in self.edge_types for t in (et[0], et[2])})
+        self._slot_of: Dict[str, np.ndarray] = {}
+
+    def slot_degree_bounds(self, seed_type: str, batch_size: int
+                           ) -> Dict[EdgeType, List[Tuple[int, int, int]]]:
+        """Static dst-slot in-degree bounds per edge type (loader ELL plan)."""
+        return hetero_static_slot_bounds(batch_size, self.num_neighbors,
+                                         seed_type)
+
+    def _slot_lookup(self, node_type: str, min_cap: int) -> np.ndarray:
+        """Persistent global->slot array per type (vectorised hash map)."""
+        cap = max([min_cap] + [self.rev[et].num_rows for et in self.edge_types
+                               if node_type in (et[0], et[2])])
+        cur = self._slot_of.get(node_type)
+        if cur is None or len(cur) < cap:
+            self._slot_of[node_type] = np.full(cap, -1, np.int64)
+        return self._slot_of[node_type]
 
     def sample(self, seed_type: str, seeds: np.ndarray,
                seed_time: Optional[np.ndarray] = None) -> HeteroSamplerOutput:
         seeds = np.asarray(seeds, np.int64)
         b = len(seeds)
-        node_types = {t for et in self.edge_types for t in (et[0], et[2])}
-        node_types.add(seed_type)
+        node_types = sorted(set(self.node_types) | {seed_type})
 
+        slot_of = {t: self._slot_lookup(
+            t, int(seeds.max()) + 1 if t == seed_type and b else 1)
+            for t in node_types}
+        touched: Dict[str, List[np.ndarray]] = {t: [] for t in node_types}
         nodes: Dict[str, List[np.ndarray]] = {
             t: [np.array([-1], np.int64)] for t in node_types}
-        slot_of: Dict[str, Dict[int, int]] = {t: {} for t in node_types}
         num_nodes: Dict[str, List[int]] = {t: [1] for t in node_types}
         rows: Dict[EdgeType, List[np.ndarray]] = {et: [] for et in
                                                   self.edge_types}
@@ -75,8 +152,24 @@ class HeteroNeighborSampler:
         num_edges: Dict[EdgeType, List[int]] = {et: [] for et in
                                                 self.edge_types}
 
-        for i, g in enumerate(seeds):
-            slot_of[seed_type][int(g)] = 1 + i
+        try:
+            return self._sample(seed_type, seeds, seed_time, slot_of,
+                                touched, nodes, num_nodes, rows, cols, eids,
+                                num_edges, node_types)
+        finally:
+            # the lookups must come back clean even when sampling raises
+            # mid-hop (bad seed id, fanout mismatch): stale slots would
+            # silently corrupt every later batch from this sampler
+            for t in node_types:
+                for arr in touched[t]:
+                    slot_of[t][arr] = -1
+
+    def _sample(self, seed_type, seeds, seed_time, slot_of, touched, nodes,
+                num_nodes, rows, cols, eids, num_edges,
+                node_types) -> HeteroSamplerOutput:
+        b = len(seeds)
+        slot_of[seed_type][seeds] = np.arange(1, b + 1)
+        touched[seed_type].append(seeds)
         nodes[seed_type].append(seeds)
         num_nodes[seed_type][0] += b
 
@@ -90,8 +183,11 @@ class HeteroNeighborSampler:
                          for t in node_types}
 
         for hop in range(self.depth):
-            new_nodes: Dict[str, List[int]] = {t: [] for t in node_types}
+            # discoveries this hop, per src type: (array, times|None) per pass
+            new_nodes: Dict[str, List[np.ndarray]] = {t: [] for t in
+                                                      node_types}
             new_times: Dict[str, List] = {t: [] for t in node_types}
+            next_slot = {t: sum(num_nodes[t]) for t in node_types}
             for et in self.edge_types:
                 src_t, _, dst_t = et
                 fanout = self.num_neighbors[et][hop]
@@ -108,27 +204,41 @@ class HeteroNeighborSampler:
                 src, eid, parent = _pick_neighbors(
                     csr, front, fanout, self.rng, seed_time=st,
                     strategy=self.temporal_strategy)
+                # vectorised dedup: first occurrence of each unseen global
+                # id, slotted in BFS discovery order (shared slot map across
+                # edge types within the hop)
+                valid = src >= 0
+                vsrc = src[valid]
+                lut = slot_of[src_t]
+                base = next_slot[src_t]
+                unseen = lut[vsrc] < 0
+                uniq, first = np.unique(vsrc[unseen], return_index=True)
+                disc = uniq[np.argsort(first, kind="stable")]
+                lut[disc] = base + np.arange(len(disc))
+                next_slot[src_t] += len(disc)
+                touched[src_t].append(disc)
+                new_nodes[src_t].append(disc)
+                nt = None
+                if frontier_time[dst_t] is not None:
+                    # time bound of a discovered node = its discovering
+                    # parent's (first writer in slot order wins up to numpy
+                    # fancy-assignment semantics, matching the homogeneous
+                    # sampler)
+                    pt = frontier_time[dst_t][parent[valid]]
+                    first_slot = lut[vsrc] - base
+                    keep = (first_slot >= 0) & (first_slot < len(disc))
+                    nt = np.zeros(len(disc), dtype=np.asarray(pt).dtype)
+                    nt[first_slot[keep]] = pt[keep]
+                new_times[src_t].append(nt)
+                # edge assembly: valid edges compacted to the front, pads
+                # are (0, 0) null->null self-loops
+                w = int(valid.sum())
                 row = np.zeros(budget, np.int64)
                 col = np.zeros(budget, np.int64)
                 ev = np.full(budget, -1, np.int64)
-                w = 0
-                base = num_nodes[src_t]
-                for j in range(budget):
-                    g = int(src[j])
-                    if g < 0:
-                        continue
-                    s = slot_of[src_t].get(g)
-                    if s is None:
-                        s = sum(num_nodes[src_t]) + len(new_nodes[src_t])
-                        slot_of[src_t][g] = s
-                        new_nodes[src_t].append(g)
-                        if frontier_time[dst_t] is not None:
-                            new_times[src_t].append(
-                                frontier_time[dst_t][parent[j]])
-                    row[w] = s
-                    col[w] = frontier_slots[dst_t][parent[j]]
-                    ev[w] = eid[j]
-                    w += 1
+                row[:w] = lut[vsrc]
+                col[:w] = frontier_slots[dst_t][parent[valid]]
+                ev[:w] = eid[valid]
                 rows[et].append(row)
                 cols[et].append(col)
                 eids[et].append(ev)
@@ -136,8 +246,10 @@ class HeteroNeighborSampler:
             for t in node_types:
                 budget_t = sum(len(frontier[et2[2]]) * self.num_neighbors[
                     et2][hop] for et2 in self.edge_types if et2[0] == t)
+                disc_t = (np.concatenate(new_nodes[t]) if new_nodes[t]
+                          else np.zeros(0, np.int64))
                 blk = np.full(budget_t, -1, np.int64)
-                blk[:len(new_nodes[t])] = new_nodes[t]
+                blk[:len(disc_t)] = disc_t
                 nodes[t].append(blk)
                 num_nodes[t].append(budget_t)
             for t in node_types:
@@ -145,13 +257,21 @@ class HeteroNeighborSampler:
                 frontier[t] = blk
                 fs = np.zeros(len(blk), np.int64)
                 valid = blk >= 0
-                fs[valid] = [slot_of[t][int(g)] for g in blk[valid]]
+                fs[valid] = slot_of[t][blk[valid]]
                 frontier_slots[t] = fs
-                if any(new_times[t]):
-                    ft = np.zeros(len(blk),
-                                  dtype=np.asarray(new_times[t]).dtype)
-                    ft[:len(new_times[t])] = new_times[t]
+                if any(a is not None for a in new_times[t]):
+                    dtype = next(a.dtype for a in new_times[t]
+                                 if a is not None)
+                    segs = [a if a is not None else np.zeros(len(n), dtype)
+                            for a, n in zip(new_times[t], new_nodes[t])]
+                    new = (np.concatenate(segs) if segs
+                           else np.zeros(0, dtype))
+                    ft = np.zeros(len(blk), dtype=dtype)
+                    ft[:len(new)] = new
                     frontier_time[t] = ft
+                elif frontier_time[t] is not None:
+                    frontier_time[t] = np.zeros(
+                        len(blk), dtype=frontier_time[t].dtype)
 
         return HeteroSamplerOutput(
             node={t: np.concatenate(v) for t, v in nodes.items()},
@@ -165,17 +285,85 @@ class HeteroNeighborSampler:
             seed_slots=np.arange(1, b + 1), seed_type=seed_type)
 
 
-class HeteroNeighborLoader:
-    """Typed mini-batches: sampler + per-type feature fetch (paper C6+C7)."""
+@dataclasses.dataclass
+class HeteroBatch:
+    """A typed sampled subgraph with fetched features (jit-ready pytree).
+
+    Per-edge-type ``EdgeIndex`` objects carry host-prefilled CSR/CSC (and,
+    with Pallas dispatch on, static-layout ELL) caches; the static aux data
+    (seed type + per-hop budgets) is identical for every batch of the same
+    seed count, so batches share a single jit trace.
+    """
+    x_dict: Dict[str, jnp.ndarray]
+    edge_index_dict: Dict[EdgeType, EdgeIndex]
+    n_id_dict: Dict[str, jnp.ndarray]            # global ids, -1 = pad
+    e_id_dict: Dict[EdgeType, jnp.ndarray]       # global edge ids, -1 = pad
+    seed_slots: jnp.ndarray                      # (B,) slots in seed type
+    seed_type: str
+    num_sampled_nodes_dict: Dict[str, List[int]]
+    num_sampled_edges_dict: Dict[EdgeType, List[int]]
+    y: Optional[jnp.ndarray] = None
+    extras: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def num_nodes_dict(self) -> Dict[str, int]:
+        return {t: int(x.shape[0]) for t, x in self.x_dict.items()}
+
+    def seed_output(self, out_dict: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        return out_dict[self.seed_type][self.seed_slots]
+
+
+def _hetero_batch_flatten(b: HeteroBatch):
+    children = (b.x_dict, b.edge_index_dict, b.n_id_dict, b.e_id_dict,
+                b.seed_slots, b.y, b.extras)
+    aux = (b.seed_type,
+           tuple(sorted((t, tuple(v))
+                        for t, v in b.num_sampled_nodes_dict.items())),
+           tuple(sorted((et, tuple(v))
+                        for et, v in b.num_sampled_edges_dict.items())))
+    return children, aux
+
+
+def _hetero_batch_unflatten(aux, children):
+    x, ei, n_id, e_id, seed_slots, y, extras = children
+    seed_type, nn, ne = aux
+    return HeteroBatch(
+        x_dict=x, edge_index_dict=ei, n_id_dict=n_id, e_id_dict=e_id,
+        seed_slots=seed_slots, seed_type=seed_type,
+        num_sampled_nodes_dict={t: list(v) for t, v in nn},
+        num_sampled_edges_dict={et: list(v) for et, v in ne},
+        y=y, extras=extras)
+
+
+# HeteroBatch flows through jit boundaries whole (per-hop budgets and the
+# seed type are static aux data); identical budgets -> identical treedef ->
+# no recompiles across batches.
+jax.tree_util.register_pytree_node(HeteroBatch, _hetero_batch_flatten,
+                                   _hetero_batch_unflatten)
+
+
+class HeteroNeighborLoader(_PrefetchLoader):
+    """Typed mini-batches: sampler + per-type feature fetch (paper C6+C7).
+
+    Built on the same producer-thread/prefetch machinery as
+    ``NeighborLoader``; the producer pre-fills every relation's CSR/CSC
+    host-side and — when Pallas dispatch is on (``prefill_ell=None`` follows
+    ``use_pallas()``) — packs a static-layout bucketed ELL per edge type
+    against the sampler's budgets, so whole ``HeteroBatch``es flow through
+    jit with one trace and every relation's ``propagate`` reaches the
+    Pallas SpMM kernel. A ``drop_last=False`` tail batch gets its own
+    (cached-by-size) static layouts instead of being silently dropped.
+    """
 
     def __init__(self, feature_store, graph_store, *,
                  num_neighbors: Dict[EdgeType, Sequence[int]],
                  input_type: str, input_nodes: np.ndarray, batch_size: int,
                  input_time: Optional[np.ndarray] = None,
+                 labels_attr: Optional[str] = "y",
                  temporal_strategy: str = "uniform",
-                 shuffle: bool = False, seed: int = 0):
-        import jax.numpy as jnp
-        self.jnp = jnp
+                 transform=None, shuffle: bool = False,
+                 drop_last: bool = True, prefetch: int = 0,
+                 prefill_ell: Optional[bool] = None, seed: int = 0):
         self.fs = feature_store
         self.sampler = HeteroNeighborSampler(
             graph_store, num_neighbors,
@@ -185,23 +373,53 @@ class HeteroNeighborLoader:
         self.input_time = (None if input_time is None
                            else np.asarray(input_time))
         self.batch_size = batch_size
+        self.labels_attr = labels_attr
+        self.transform = transform
         self.shuffle = shuffle
+        self.drop_last = drop_last
+        self.prefetch = prefetch
+        self.prefill_ell = prefill_ell
+        self._ell_layouts: dict = {}  # num_seeds -> {edge_type: layout}
         self.rng = np.random.default_rng(seed)
 
-    def __iter__(self):
-        jnp = self.jnp
-        order = np.arange(len(self.input_nodes))
-        if self.shuffle:
-            self.rng.shuffle(order)
-        bs = self.batch_size
-        for i in range(0, len(order) - bs + 1, bs):
-            idx = order[i:i + bs]
-            out = self.sampler.sample(
-                self.input_type, self.input_nodes[idx],
-                None if self.input_time is None else self.input_time[idx])
-            x_dict = {t: jnp.asarray(self.fs.get_padded(
-                n, group=t, attr="x")) for t, n in out.node.items()}
-            ei_dict = {et: jnp.asarray(
-                np.stack([out.row[et], out.col[et]])).astype(jnp.int32)
-                for et in out.row}
-            yield out, x_dict, ei_dict
+    def _ell_layouts_for(self, num_seeds: int) -> dict:
+        if num_seeds not in self._ell_layouts:
+            bounds = self.sampler.slot_degree_bounds(self.input_type,
+                                                     num_seeds)
+            self._ell_layouts[num_seeds] = {
+                et: ell_layout_from_bounds(b) for et, b in bounds.items()}
+        return self._ell_layouts[num_seeds]
+
+    def _make_batch(self, seeds: np.ndarray,
+                    seed_time: Optional[np.ndarray]) -> HeteroBatch:
+        out = self.sampler.sample(self.input_type, seeds, seed_time)
+        fill_ell = (use_pallas() if self.prefill_ell is None
+                    else self.prefill_ell)
+        layouts = self._ell_layouts_for(len(seeds)) if fill_ell else {}
+        x_dict = {t: jnp.asarray(self.fs.get_padded(n, group=t, attr="x"))
+                  for t, n in out.node.items()}
+        ei_dict = {}
+        for et in self.sampler.edge_types:
+            ei_dict[et] = EdgeIndex.from_coo_prefilled(
+                out.row[et], out.col[et],
+                len(out.node[et[0]]), len(out.node[et[2]]),
+                ell_layout=layouts.get(et, []) if fill_ell else None)
+        y = None
+        if self.labels_attr is not None:
+            try:
+                y = jnp.asarray(self.fs.get_tensor(
+                    group=self.input_type, attr=self.labels_attr,
+                    index=seeds))
+            except KeyError:
+                y = None
+        batch = HeteroBatch(
+            x_dict=x_dict, edge_index_dict=ei_dict,
+            n_id_dict={t: jnp.asarray(n) for t, n in out.node.items()},
+            e_id_dict={et: jnp.asarray(e) for et, e in out.edge.items()},
+            seed_slots=jnp.asarray(out.seed_slots.astype(np.int32)),
+            seed_type=out.seed_type,
+            num_sampled_nodes_dict=out.num_sampled_nodes,
+            num_sampled_edges_dict=out.num_sampled_edges, y=y)
+        if self.transform is not None:
+            batch = self.transform(batch)
+        return batch

@@ -19,7 +19,7 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
-from typing import Callable, Iterator, List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -76,7 +76,93 @@ def _batch_unflatten(aux, children):
 jax.tree_util.register_pytree_node(Batch, _batch_flatten, _batch_unflatten)
 
 
-class NeighborLoader:
+class _PrefetchLoader:
+    """Seed-batching + producer-thread prefetch shared by both loaders.
+
+    Subclasses set ``input_nodes``, ``input_time``, ``batch_size``,
+    ``shuffle``, ``drop_last``, ``prefetch`` and ``rng`` in ``__init__`` and
+    implement ``_make_batch(seeds, seed_time)``; iteration (including the
+    double-buffered producer thread, exception propagation through the
+    queue, and reaping an abandoned producer) lives here once — the
+    homogeneous and heterogeneous loaders differ only in what a batch *is*.
+    """
+
+    input_nodes: np.ndarray
+    input_time: Optional[np.ndarray]
+    batch_size: int
+    shuffle: bool
+    drop_last: bool
+    prefetch: int
+    rng: np.random.Generator
+
+    def _make_batch(self, seeds: np.ndarray,
+                    seed_time: Optional[np.ndarray]):
+        raise NotImplementedError
+
+    def _seed_batches(self):
+        order = np.arange(len(self.input_nodes))
+        if self.shuffle:
+            self.rng.shuffle(order)
+        bs = self.batch_size
+        for i in range(0, len(order) - (bs - 1 if self.drop_last else 0), bs):
+            idx = order[i:i + bs]
+            if len(idx) < bs and self.drop_last:
+                break
+            yield (self.input_nodes[idx],
+                   None if self.input_time is None else self.input_time[idx])
+
+    def __iter__(self):
+        if self.prefetch <= 0:
+            for seeds, t in self._seed_batches():
+                yield self._make_batch(seeds, t)
+            return
+        # double-buffered host prefetch (the paper's multi-worker loading,
+        # adapted: vectorised sampling + a producer thread)
+        q: "queue.Queue" = queue.Queue(maxsize=self.prefetch)
+        stop = object()
+        abandoned = threading.Event()
+
+        def producer():
+            # A raised exception must reach the consumer: swallowing it here
+            # would never enqueue the sentinel and deadlock `q.get()`.
+            try:
+                for seeds, t in self._seed_batches():
+                    if abandoned.is_set():
+                        return
+                    q.put(self._make_batch(seeds, t))
+            except BaseException as exc:  # noqa: BLE001 - re-raised below
+                q.put(exc)
+                return
+            q.put(stop)
+
+        th = threading.Thread(target=producer, daemon=True)
+        th.start()
+        try:
+            while True:
+                item = q.get()
+                if item is stop:
+                    break
+                if isinstance(item, BaseException):
+                    raise item
+                yield item
+        finally:
+            # Reap the producer even when the consumer abandons the iterator
+            # early (GeneratorExit): drain the bounded queue so a blocked
+            # q.put unblocks, then join.
+            abandoned.set()
+            while th.is_alive():
+                try:
+                    q.get_nowait()
+                except queue.Empty:
+                    pass
+                th.join(timeout=0.01)
+
+    def __len__(self):
+        n = len(self.input_nodes)
+        return n // self.batch_size if self.drop_last else -(-n // self.batch_size)
+
+
+class NeighborLoader(_PrefetchLoader):
     def __init__(self, feature_store: FeatureStore, graph_store: GraphStore,
                  *, num_neighbors: Sequence[int], batch_size: int,
                  input_nodes: Optional[np.ndarray] = None,
@@ -144,65 +230,3 @@ class NeighborLoader:
         if self.transform is not None:
             batch = self.transform(batch)
         return batch
-
-    def _seed_batches(self):
-        order = np.arange(len(self.input_nodes))
-        if self.shuffle:
-            self.rng.shuffle(order)
-        bs = self.batch_size
-        for i in range(0, len(order) - (bs - 1 if self.drop_last else 0), bs):
-            idx = order[i:i + bs]
-            if len(idx) < bs and self.drop_last:
-                break
-            yield (self.input_nodes[idx],
-                   None if self.input_time is None else self.input_time[idx])
-
-    def __iter__(self) -> Iterator[Batch]:
-        if self.prefetch <= 0:
-            for seeds, t in self._seed_batches():
-                yield self._make_batch(seeds, t)
-            return
-        # double-buffered host prefetch (the paper's multi-worker loading,
-        # adapted: vectorised sampling + a producer thread)
-        q: "queue.Queue" = queue.Queue(maxsize=self.prefetch)
-        stop = object()
-        abandoned = threading.Event()
-
-        def producer():
-            # A raised exception must reach the consumer: swallowing it here
-            # would never enqueue the sentinel and deadlock `q.get()`.
-            try:
-                for seeds, t in self._seed_batches():
-                    if abandoned.is_set():
-                        return
-                    q.put(self._make_batch(seeds, t))
-            except BaseException as exc:  # noqa: BLE001 - re-raised below
-                q.put(exc)
-                return
-            q.put(stop)
-
-        th = threading.Thread(target=producer, daemon=True)
-        th.start()
-        try:
-            while True:
-                item = q.get()
-                if item is stop:
-                    break
-                if isinstance(item, BaseException):
-                    raise item
-                yield item
-        finally:
-            # Reap the producer even when the consumer abandons the iterator
-            # early (GeneratorExit): drain the bounded queue so a blocked
-            # q.put unblocks, then join.
-            abandoned.set()
-            while th.is_alive():
-                try:
-                    q.get_nowait()
-                except queue.Empty:
-                    pass
-                th.join(timeout=0.01)
-
-    def __len__(self):
-        n = len(self.input_nodes)
-        return n // self.batch_size if self.drop_last else -(-n // self.batch_size)

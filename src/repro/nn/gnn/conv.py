@@ -91,6 +91,18 @@ class SAGEConv(MessagePassing):
         return (self.lin_l.apply(params["lin_l"], agg)
                 + self.lin_r.apply(params["lin_r"], x_dst))
 
+    def fused_projections(self, params):
+        """(w_neigh, b_neigh, w_root, b_root) — the grouped-GEMM contract.
+
+        SAGE aggregates *raw* source features and only then projects, so a
+        hetero wrapper may hoist both linears out of the conv and batch
+        them with every other relation's into one grouped matmul
+        (``HeteroConv``'s single-MXU-launch projection path) without
+        changing the math.
+        """
+        return (params["lin_l"]["w"], params["lin_l"].get("b"),
+                params["lin_r"]["w"], params["lin_r"].get("b"))
+
 
 class GINConv(MessagePassing):
     def __init__(self, in_features: int, out_features: int,

@@ -60,7 +60,9 @@ class BasicGNN(Module):
             edge_weight, self_weight = gcn_norm(edge_index, n0)
         for i, conv in enumerate(self.convs):
             extra = {}
-            if trim and num_sampled_nodes_per_hop is not None:
+            # layer 0 sees the untrimmed graph: skipping its no-op trim
+            # keeps any loader-prefilled EdgeIndex caches intact there
+            if trim and num_sampled_nodes_per_hop is not None and i > 0:
                 x, edge_index, edge_weight = trim_to_layer(
                     i, num_sampled_nodes_per_hop, num_sampled_edges_per_hop,
                     x, edge_index, edge_attr=edge_weight)

@@ -79,10 +79,12 @@ def test_hetero_loader_feeds_hetero_gnn(rng):
     net = to_hetero(lambda i, o: SAGEConv(i, o), metadata, [8, 16, 4])
     params = net.init(jax.random.PRNGKey(0))
     n_batches = 0
-    for out, x_dict, ei_dict in loader:
-        res = net.apply(params, x_dict, ei_dict,
-                        {t: x.shape[0] for t, x in x_dict.items()})
+    for batch in loader:
+        res = net.apply(params, batch.x_dict, batch.edge_index_dict,
+                        batch.num_nodes_dict)
         assert res["item"].shape[1] == 4
         assert np.isfinite(np.asarray(res["item"])).all()
+        out_seed = batch.seed_output(res)
+        assert out_seed.shape == (8, 4)
         n_batches += 1
     assert n_batches == 4
