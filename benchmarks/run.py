@@ -24,6 +24,7 @@ def main() -> None:
         ("grouped_matmul", grouped_matmul_bench.run),
         ("spmm", spmm_bench.run),
         ("spmm_loader_step", spmm_bench.run_loader_step),
+        ("spmm_train_step", spmm_bench.run_train_step),
         ("spmm_hetero_step", spmm_bench.run_hetero_step),
         ("explainer_fidelity", explainer_fidelity.run),
     ]

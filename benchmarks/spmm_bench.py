@@ -223,6 +223,111 @@ def run_loader_step(out_path: str = "BENCH_spmm.json") -> None:
     append_cell(out_path, rec)
 
 
+def run_train_step(out_path: str = "BENCH_spmm.json") -> None:
+    """Oracle-grad vs kernel-grad train step (the custom-VJP PR path).
+
+    A NeighborLoader batch with host-prefilled static ELL caches drives a
+    jit'd ``value_and_grad`` GCN-style step twice: once dispatching the XLA
+    segment oracle and once forced onto the Pallas ELL kernel, whose custom
+    VJP runs the backward as a masked scatter-add over the same buckets
+    (with an ``edge_weight`` cotangent — the step is GCN-normalised, so the
+    weighted path differentiates too). Verifies gradient parity and ONE
+    trace per variant across batches, then times both. Off-TPU the kernel
+    runs in interpret mode, so its timing lands under
+    ``step_grad_kernel_interpret_us`` and uses a deliberately small cell.
+    Appends a ``train_step`` record to ``BENCH_spmm.json``.
+    """
+    import time
+
+    from repro.data.data import Data
+    from repro.data.loader import NeighborLoader
+    from repro.nn.gnn.conv import gcn_norm
+
+    on_tpu = jax.default_backend() == "tpu"
+    rng = np.random.default_rng(17)
+    n, e, feat, hidden = 2048, 16384, 128, 32
+    batch_size, fanouts = (64, [10, 5]) if on_tpu else (8, [4, 2])
+    data = Data(x=rng.standard_normal((n, feat)).astype(np.float32),
+                edge_index=np.stack([rng.integers(0, n, e),
+                                     rng.integers(0, n, e)]),
+                y=rng.integers(0, 4, n))
+    loader = NeighborLoader(data, data, num_neighbors=fanouts,
+                            batch_size=batch_size, shuffle=True,
+                            prefill_ell=True, seed=0)
+    params = {
+        "w1": jnp.asarray(rng.standard_normal((feat, hidden)) * 0.1,
+                          jnp.float32),
+        "w2": jnp.asarray(rng.standard_normal((hidden, 4)) * 0.1,
+                          jnp.float32),
+    }
+    traces = {"oracle": [], "kernel": []}
+
+    def make_step(force_pallas: bool, tag: str):
+        interpret = None if not force_pallas else (not on_tpu)
+
+        @jax.jit
+        def step(params, batch):
+            traces[tag].append(1)  # trace counter: must stay at 1
+
+            def loss_fn(p):
+                ew, _ = gcn_norm(batch.edge_index, batch.num_nodes,
+                                 add_self_loops=False)
+                h = jax.nn.relu(batch.edge_index.matmul(
+                    batch.x @ p["w1"], edge_weight=ew,
+                    force_pallas=force_pallas, interpret=interpret))
+                out = batch.edge_index.matmul(
+                    h @ p["w2"], edge_weight=ew,
+                    force_pallas=force_pallas, interpret=interpret)
+                return (out[batch.seed_slots] ** 2).mean()
+
+            return jax.value_and_grad(loss_fn)(params)
+
+        return step
+
+    step_oracle = make_step(False, "oracle")
+    step_kernel = make_step(True, "kernel")
+
+    it = iter(loader)
+    batches = [next(it) for _ in range(4)]
+
+    lo, go = step_oracle(params, batches[0])
+    lk, gk = step_kernel(params, batches[0])
+    lo.block_until_ready(), lk.block_until_ready()
+    diffs = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.abs(a - b).max()), go, gk)
+    max_diff = max(jax.tree_util.tree_leaves(diffs))
+    assert max_diff < 1e-3, f"kernel-grad != oracle-grad: {max_diff}"
+
+    def time_over_batches(fn, rounds: int = 3):
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            for b in batches:
+                fn(params, b)[0].block_until_ready()
+        return (time.perf_counter() - t0) / (rounds * len(batches)) * 1e6
+
+    oracle_us = time_over_batches(step_oracle)
+    kernel_us = time_over_batches(step_kernel)
+    assert len(traces["oracle"]) == 1 and len(traces["kernel"]) == 1, \
+        f"recompiled across batches: {traces}"
+
+    key = "step_grad_kernel_us" if on_tpu else "step_grad_kernel_interpret_us"
+    rec = {
+        "cell": "train_step",
+        "backend": jax.default_backend(),
+        "nodes": n, "edges": e, "feat": feat,
+        "batch_size": batch_size, "fanouts": fanouts,
+        "step_grad_oracle_us": oracle_us,
+        key: kernel_us,
+        "trace_count_oracle": len(traces["oracle"]),
+        "trace_count_kernel": len(traces["kernel"]),
+        "grad_max_abs_diff": max_diff,
+    }
+    emit("spmm/train_step/grad_oracle_us", oracle_us)
+    emit(f"spmm/train_step/{key.removeprefix('step_')}", kernel_us,
+         f"grad_max_abs_diff={max_diff:.2e}")
+    append_cell(out_path, rec)
+
+
 def run_hetero_step(out_path: str = "BENCH_spmm.json") -> None:
     """Typed loader -> jit'd HeteroGNN train-step cell (the PR-3 path).
 
@@ -348,4 +453,5 @@ def run_hetero_step(out_path: str = "BENCH_spmm.json") -> None:
 if __name__ == "__main__":
     run()
     run_loader_step()
+    run_train_step()
     run_hetero_step()

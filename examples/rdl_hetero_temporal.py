@@ -9,15 +9,18 @@ full RDL loop on the jit-ready hetero stack:
     -> HeteroNeighborLoader (typed <= t sampling, no leakage; per-relation
        host-prefilled EdgeIndex caches, registered-pytree HeteroBatch)
     -> jit'd to_hetero(GraphSAGE) train step — ONE compilation across
-       batches (differentiable XLA-oracle aggregation; the Pallas kernels
-       carry no VJP rules yet, see ROADMAP)
+       batches, *on the kernel path*: with Pallas dispatch on (TPU backend
+       or REPRO_USE_PALLAS=1) every relation's aggregation runs the
+       bucketed ELL kernel and all per-type projections one grouped matmul
+       per layer, in the backward pass too — the kernels' custom VJPs
+       (scatter-add over the same ELL buckets; two grouped GEMMs over the
+       same tile->group table) make jax.grad ride the same kernels the
+       serving pass uses
     -> per-seed prediction of a future quantity (churn-style label)
-    -> jit'd forward *serving* pass, where Pallas dispatch (TPU or
-       REPRO_USE_PALLAS=1) routes every relation's aggregation to the
-       bucketed ELL kernel and all per-type projections to one grouped
-       matmul per layer
+    -> jit'd forward serving pass on the identical dispatch path
 
 Run:  PYTHONPATH=src python examples/rdl_hetero_temporal.py
+      REPRO_USE_PALLAS=1 PYTHONPATH=src python examples/rdl_hetero_temporal.py
 """
 
 import jax
@@ -90,13 +93,14 @@ def main(steps=60, lr=0.02):
             input_nodes=seed_users, input_time=seed_times, batch_size=32,
             temporal_strategy="recent", labels_attr=None, prefetch=2, **kw)
 
-    # training runs the differentiable path: cache-backed XLA-oracle
-    # aggregation + per-relation GEMMs (the Pallas kernels are forward-only
-    # until they grow custom VJPs — ROADMAP follow-up)
-    loader = make_loader(transform=transform, prefill_ell=False)
+    # training rides the SAME dispatch tree as serving: with Pallas on
+    # (TPU / REPRO_USE_PALLAS=1) the loader prefills per-relation static
+    # ELL caches and the jit'd grad step runs the bucketed ELL kernel +
+    # one grouped projection matmul per layer forward AND backward (the
+    # custom VJPs); with Pallas off everything falls to the XLA oracle
+    loader = make_loader(transform=transform)
     metadata = (["user", "txn"], [ET_OF, ET_MADE])
-    net = to_hetero(lambda i, o: SAGEConv(i, o), metadata, [feat, 32, 2],
-                    grouped=False)
+    net = to_hetero(lambda i, o: SAGEConv(i, o), metadata, [feat, 32, 2])
     params = net.init(jax.random.PRNGKey(0))
     traces = []
 
@@ -126,19 +130,15 @@ def main(steps=60, lr=0.02):
     print(f"training done: {len(traces)} compilation(s) across "
           f"{steps} steps")
 
-    # serving pass: forward-only, so Pallas dispatch (TPU backend or
-    # REPRO_USE_PALLAS=1) prefills per-relation static ELL caches in the
-    # loader and routes every relation through the bucketed ELL kernel,
-    # with all per-type projections in one grouped matmul per layer
-    serve_net = to_hetero(lambda i, o: SAGEConv(i, o), metadata,
-                          [feat, 32, 2])
+    # serving pass: same network, same dispatch path as training — the
+    # train/serve kernel split is gone now that the kernels differentiate
     serve_traces = []
 
     @jax.jit
     def predict(params, batch):
         serve_traces.append(1)
-        out = serve_net.apply(params, batch.x_dict, batch.edge_index_dict,
-                              batch.num_nodes_dict)
+        out = net.apply(params, batch.x_dict, batch.edge_index_dict,
+                        batch.num_nodes_dict)
         return jnp.argmax(batch.seed_output(out), axis=-1)
 
     row_ptr["i"] = 0

@@ -53,13 +53,12 @@ class EdgeIndex:
       _ell / _ell_t: optional cached degree-bucketed blocked-ELL packings of
                      the CSC (forward) / CSR (transpose) adjacency — tuples of
                      (row_ids, ell_idx, ell_pos) buckets feeding the Pallas
-                     pipelined SpMM kernel.
-      _ell_trimmed:  static marker set by ``trim_to_layer``: the ELL cache
-                     was inherited from an untrimmed parent, so its
-                     ``ell_pos`` slots index the *parent's* CSC edge order.
-                     Unweighted matmuls still take the Pallas path; weighted
-                     ones fall back to the oracle (a per-edge gather through
-                     stale positions would be silently wrong).
+                     pipelined SpMM kernel. ``ell_pos`` slots index the
+                     *original COO edge order* (the order callers pass
+                     ``edge_weight`` in), so weighted matmuls gather per-call
+                     weights directly — and a layer-trimmed cache keeps
+                     serving them, because kept slots reference kept (prefix)
+                     edges only.
     """
 
     data: jnp.ndarray
@@ -71,21 +70,19 @@ class EdgeIndex:
     _csc: Optional[Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]] = None
     _ell: Optional[Tuple] = None
     _ell_t: Optional[Tuple] = None
-    _ell_trimmed: bool = False
 
     # ------------------------------------------------------------------ pytree
     def tree_flatten(self):
         children = (self.data, self._csr, self._csc, self._ell, self._ell_t)
         aux = (self.num_src_nodes, self.num_dst_nodes, self.sort_order,
-               self.is_undirected, self._ell_trimmed)
+               self.is_undirected)
         return children, aux
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         data, csr, csc, ell, ell_t = children
-        ns, nd, so, undirected, ell_trimmed = aux
-        return cls(data, ns, nd, so, undirected, csr, csc, ell, ell_t,
-                   ell_trimmed)
+        ns, nd, so, undirected = aux
+        return cls(data, ns, nd, so, undirected, csr, csc, ell, ell_t)
 
     # ------------------------------------------------------------- constructors
     @classmethod
@@ -140,10 +137,9 @@ class EdgeIndex:
         csr_idx = dst[perm_r]
         ell = None
         if ell_layout is not None:
-            ell = tuple(
-                (jnp.asarray(r), jnp.asarray(i), jnp.asarray(p))
-                for r, i, p in spmm_ops.csr_to_ell_static(
-                    colptr, csc_idx, ell_layout, block_rows=block_rows))
+            ell = cls._ell_pos_to_coo(
+                spmm_ops.csr_to_ell_static(colptr, csc_idx, ell_layout,
+                                           block_rows=block_rows), perm_c)
         return cls(
             jnp.asarray(np.stack([src, dst])), int(num_src_nodes),
             int(num_dst_nodes), None, False,
@@ -234,10 +230,27 @@ class EdgeIndex:
             self._csc = out
         return out
 
+    @staticmethod
+    def _ell_pos_to_coo(buckets, perm) -> Tuple:
+        """Re-key bucket ``ell_pos`` slots from packed (CSR/CSC) order to the
+        original COO edge order via the cache permutation, so per-call
+        ``edge_weight`` vectors can be gathered without an extra perm gather
+        — and so the positions stay valid after a layer trim (kept slots
+        reference only kept, prefix edges)."""
+        perm = np.asarray(perm)
+        out = []
+        for r, i, p in buckets:
+            p = np.asarray(p)
+            p_coo = np.where(p >= 0, perm[np.maximum(p, 0)],
+                             -1).astype(np.int32)
+            out.append((jnp.asarray(r), jnp.asarray(i), jnp.asarray(p_coo)))
+        return tuple(out)
+
     def get_ell(self, transpose: bool = False) -> Optional[Tuple]:
         """Degree-bucketed blocked-ELL packing of A (or A^T) for the Pallas
         SpMM kernel: a tuple of ``(row_ids, ell_idx, ell_pos)`` buckets
-        (see ``kernels.spmm.ops.csr_to_ell_bucketed``).
+        (see ``kernels.spmm.ops.csr_to_ell_bucketed``); ``ell_pos`` is
+        re-keyed to COO edge order (see :meth:`_ell_pos_to_coo`).
 
         The packing needs concrete (host) arrays — called with tracers it
         returns ``None`` and the caller falls back to the XLA oracle; filled
@@ -249,13 +262,13 @@ class EdgeIndex:
         cache = self._ell_t if transpose else self._ell
         if cache is not None:
             return cache
-        indptr, indices, _ = self.get_csr() if transpose else self.get_csc()
-        if not self._memoizable((indptr, indices)):
+        indptr, indices, perm = (self.get_csr() if transpose
+                                 else self.get_csc())
+        if not self._memoizable((indptr, indices, perm)):
             return None
-        buckets = tuple(
-            (jnp.asarray(r), jnp.asarray(i), jnp.asarray(p))
-            for r, i, p in spmm_ops.csr_to_ell_bucketed(
-                np.asarray(indptr), np.asarray(indices)))
+        buckets = self._ell_pos_to_coo(
+            spmm_ops.csr_to_ell_bucketed(np.asarray(indptr),
+                                         np.asarray(indices)), perm)
         if transpose:
             self._ell_t = buckets
         else:
@@ -294,7 +307,11 @@ class EdgeIndex:
         Dispatch: on TPU (or ``force_pallas=True``) the degree-bucketed
         blocked-ELL packing feeds the pipelined Pallas kernel; otherwise —
         or when packing is impossible (tracing without a filled ELL cache) —
-        the fused XLA segment oracle runs.
+        the fused XLA segment oracle runs. Both branches are differentiable:
+        the Pallas branch carries a custom VJP (backward = masked scatter-add
+        over the same buckets, with a per-slot ``dy[row] . x[col]`` cotangent
+        scattered back into ``edge_weight`` in slot order), so jit'd
+        ``jax.grad`` train steps ride the fast path too.
         """
         from repro.kernels.spmm import ops as spmm_ops  # local import: no cycle
         from repro.kernels import use_pallas
@@ -302,17 +319,13 @@ class EdgeIndex:
         take_pallas = use_pallas() if force_pallas is None else force_pallas
         if take_pallas:
             ell = self.get_ell(transpose=transpose)
-            # A trimmed (inherited) ELL cache has stale edge positions: it
-            # serves unweighted matmuls only; weighted ones take the oracle.
-            if ell is not None and (edge_weight is None
-                                    or not self._ell_trimmed):
-                w = None
-                if edge_weight is not None:
-                    _, _, perm = (self.get_csr() if transpose
-                                  else self.get_csc())
-                    w = edge_weight[perm]
+            if ell is not None:
+                # ``ell_pos`` is keyed to COO edge order — the caller's
+                # ``edge_weight`` order — so the buckets gather it directly
+                # (valid on layer-trimmed caches too: kept slots only
+                # reference kept, prefix edges).
                 return spmm_ops.spmm_ell_bucketed(
-                    ell, x, w, num_rows=num_rows, reduce=reduce,
+                    ell, x, edge_weight, num_rows=num_rows, reduce=reduce,
                     force_pallas=take_pallas, interpret=interpret)
         if not transpose:
             colptr, row, perm = self.get_csc()

@@ -2,12 +2,15 @@
 
 The ``Explainer`` bridges user GNNs, explanation algorithms, and graph data
 to produce node-feature attributions A_V in R^{|V| x F} and edge
-attributions a_E in R^{|E|}. Structural explanations are generated through
-the *message callback* mechanism c(.): explanation mode forces edge-level
-materialisation (MessagePassing's fallback path) and injects an edge-level
-soft mask that reweighs every message — exactly the paper's design, which is
-also what makes the non-differentiable edge set E differentiable for
-gradient-based (Captum-style) algorithms.
+attributions a_E in R^{|E|}. Structural explanations inject an edge-level
+soft mask that reweighs every message — the paper's c(.) mechanism, which
+makes the non-differentiable edge set E differentiable for gradient-based
+(Captum-style) algorithms. For mask-aware models (``BasicGNN``) the mask
+rides the *fused* path as a multiplicative ``edge_weight``, so explanations
+stay on the Pallas ELL kernel (whose custom VJP supplies the mask
+gradients) even under ``REPRO_USE_PALLAS=1``; models without that support
+fall back to the message-callback mechanism, which forces edge-level
+materialisation (MessagePassing's fallback path).
 
 Algorithms: 'gnn_explainer' (mask optimisation, Ying et al.), 'saliency',
 'integrated_gradients' (the CaptumExplainer analogues), 'attention' (GAT
@@ -37,8 +40,20 @@ class Explanation:
 
 def _masked_forward(model, params, x, edge_index, edge_logits, feat_mask,
                     **kw):
-    """Run the model with mask-injecting message callback c(.)."""
+    """Run the model with the soft edge mask injected.
+
+    Models that advertise ``supports_edge_mask`` (``BasicGNN``) take the
+    mask as a per-edge multiplicative ``edge_mask`` — it folds into the
+    fused SpMM's ``edge_weight``, so explanation forward *and* backward
+    passes ride the Pallas ELL kernel (its custom VJP supplies the
+    ``dy[row] . x[col]`` mask cotangent) instead of forcing edge-level
+    materialisation. Other models keep the message-callback mechanism c(.)
+    (paper §2.4), which materialises messages per edge.
+    """
     edge_w = jax.nn.sigmoid(edge_logits)
+    xm = x if feat_mask is None else x * jax.nn.sigmoid(feat_mask)[None, :]
+    if getattr(model, "supports_edge_mask", False):
+        return model.apply(params, xm, edge_index, edge_mask=edge_w, **kw)
 
     def callback(msg):
         # convs may append self-loops beyond the original edge set; those
@@ -49,7 +64,6 @@ def _masked_forward(model, params, x, edge_index, edge_logits, feat_mask,
             w = jnp.concatenate([w, jnp.ones((e - w.shape[0],), w.dtype)])
         return msg * w[:e, None].astype(msg.dtype)
 
-    xm = x if feat_mask is None else x * jax.nn.sigmoid(feat_mask)[None, :]
     return model.apply(params, xm, edge_index, message_callback=callback,
                        **kw)
 

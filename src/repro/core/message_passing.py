@@ -61,8 +61,19 @@ class MessagePassing(Module):
                   edge_attr: Optional[jnp.ndarray] = None,
                   edge_weight: Optional[jnp.ndarray] = None,
                   num_nodes: Optional[int] = None,
-                  message_callback: Optional[Callable] = None) -> jnp.ndarray:
-        """Run one message-passing step, choosing the optimal compute path."""
+                  message_callback: Optional[Callable] = None,
+                  edge_mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        """Run one message-passing step, choosing the optimal compute path.
+
+        ``edge_mask`` is a per-edge multiplicative reweighting (the
+        explainer's soft mask, paper §2.4) folded into ``edge_weight`` — so
+        unlike ``message_callback`` it does NOT force edge-level
+        materialisation: default-message convs keep the fused SpMM path, and
+        gradients w.r.t. the mask flow through the kernel's custom VJP.
+        """
+        if edge_mask is not None:
+            edge_weight = (edge_mask if edge_weight is None
+                           else edge_weight * edge_mask)
         if isinstance(x, tuple):
             x_src, x_dst = x
         else:

@@ -13,9 +13,12 @@ slot's in-edges come from exactly one hop (a block is the frontier exactly
 once), so the trimmed graph's ELL is the parent's with the rows of
 dropped-hop slots masked to capacity padding — a shape-stable elementwise
 ``where`` that works on tracers, keeping the Pallas SpMM fast path on inner
-layers (see ``_trim_ell``). ``trim_to_layer_hetero`` applies the same
-per-(node type, edge type) — deep hetero GNNs keep every relation on the
-fast path as they trim.
+layers (see ``_trim_ell``). Because ``EdgeIndex`` keys ``ell_pos`` to COO
+edge order and kept slots reference only kept (prefix) edges, the masked
+cache serves *weighted* matmuls too — per-layer ``edge_weight`` slices
+gather straight through the inherited positions, no oracle detour.
+``trim_to_layer_hetero`` applies the same per-(node type, edge type) — deep
+hetero GNNs keep every relation on the fast path as they trim.
 """
 
 from __future__ import annotations
@@ -49,9 +52,10 @@ def _trim_ell(ell, boundary: int):
     edges always point into the hop ``h-1`` block, so kept slots form a
     prefix). Rows at/past the boundary become capacity padding (``-1`` row
     ids, all-invalid neighbor slots) — shapes are unchanged, so this is
-    jit-stable and valid on tracer leaves. ``ell_pos`` is masked too but
-    still indexes the *parent's* CSC edge order; the trimmed cache is
-    therefore marked ``_ell_trimmed`` and only serves unweighted matmuls.
+    jit-stable and valid on tracer leaves. ``ell_pos`` is masked too; the
+    surviving slots' positions index the COO (BFS) edge order and point only
+    at kept prefix edges, so the trimmed cache serves weighted matmuls
+    against per-layer-sliced ``edge_weight`` vectors directly.
     """
     if ell is None:
         return None
@@ -71,8 +75,7 @@ def _trim_edge_index(edge_index: EdgeIndex, n_src: int, n_dst: int,
     return EdgeIndex(
         edge_index.data[:, :n_edges], n_src, n_dst,
         edge_index.sort_order, edge_index.is_undirected,
-        _ell=_trim_ell(edge_index._ell, recv_boundary),
-        _ell_trimmed=edge_index._ell is not None or edge_index._ell_trimmed)
+        _ell=_trim_ell(edge_index._ell, recv_boundary))
 
 
 def trim_to_layer(layer: int, num_nodes_per_hop: Sequence[int],

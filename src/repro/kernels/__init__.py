@@ -16,6 +16,40 @@ Kernels:
 USE_PALLAS_ENV = "REPRO_USE_PALLAS"
 
 
+def forward_only_pallas(impl, num_static: int, message: str):
+    """Wrap a raw ``pallas_call`` entry point so differentiation fails fast.
+
+    ``pallas_call`` carries no autodiff rule, so naked ``jax.grad`` through
+    a raw kernel dies with an opaque trace error. The *supported* backward
+    for a kernel lives in its ops-level wrapper (a hand-written
+    ``jax.custom_vjp``); this helper gives the raw entry point a VJP whose
+    backward raises ``NotImplementedError(message)`` instead — the message
+    should name the differentiable ops-level wrapper and the
+    ``REPRO_USE_PALLAS`` fallback env var.
+
+    The first ``num_static`` arguments of ``impl`` are static/hashable
+    (``nondiff_argnums``); the rest are array operands.
+    """
+    import functools
+
+    import jax
+
+    statics = tuple(range(num_static))
+
+    @functools.partial(jax.custom_vjp, nondiff_argnums=statics)
+    def wrapped(*args):
+        return impl(*args)
+
+    def fwd(*args):
+        return wrapped(*args), None
+
+    def bwd(*args):  # (*statics, residuals, cotangent)
+        raise NotImplementedError(message)
+
+    wrapped.defvjp(fwd, bwd)
+    return wrapped
+
+
 def use_pallas() -> bool:
     """Whether to dispatch Pallas kernels (TPU) or the jnp oracle (CPU/XLA).
 

@@ -47,12 +47,12 @@ def _gmm_kernel(tile_group_ref, x_ref, w_ref, out_ref, acc_ref, *, n_k: int):
 
 @functools.partial(
     jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret"))
-def grouped_matmul_pallas(x: jnp.ndarray, w: jnp.ndarray,
-                          tile_group: jnp.ndarray, *,
-                          block_m: int = DEFAULT_BM,
-                          block_n: int = DEFAULT_BN,
-                          block_k: int = DEFAULT_BK,
-                          interpret: bool = False) -> jnp.ndarray:
+def _grouped_matmul_pallas_impl(x: jnp.ndarray, w: jnp.ndarray,
+                                tile_group: jnp.ndarray, *,
+                                block_m: int = DEFAULT_BM,
+                                block_n: int = DEFAULT_BN,
+                                block_k: int = DEFAULT_BK,
+                                interpret: bool = False) -> jnp.ndarray:
     """out[tile t] = x[tile t] @ w[tile_group[t]].
 
     Args:
@@ -86,3 +86,36 @@ def grouped_matmul_pallas(x: jnp.ndarray, w: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
         interpret=interpret,
     )(tile_group, x, w)
+
+
+from repro.kernels import forward_only_pallas
+
+_grouped_matmul_pallas_cv = forward_only_pallas(
+    lambda block_m, block_n, block_k, interpret, x, w, tile_group:
+        _grouped_matmul_pallas_impl(x, w, tile_group, block_m=block_m,
+                                    block_n=block_n, block_k=block_k,
+                                    interpret=interpret),
+    num_static=4,
+    message=(
+        "grouped_matmul_pallas is the raw pre-packed Pallas kernel and has "
+        "no backward rule. Differentiate through "
+        "repro.kernels.grouped_matmul.ops.grouped_matmul, whose custom VJP "
+        "runs the backward as two grouped GEMMs over the same tile->group "
+        "table, or set REPRO_USE_PALLAS=0 to dispatch the differentiable "
+        "XLA path."))
+
+
+def grouped_matmul_pallas(x: jnp.ndarray, w: jnp.ndarray,
+                          tile_group: jnp.ndarray, *,
+                          block_m: int = DEFAULT_BM,
+                          block_n: int = DEFAULT_BN,
+                          block_k: int = DEFAULT_BK,
+                          interpret: bool = False) -> jnp.ndarray:
+    """Grouped-GEMM Pallas kernel (see :func:`_grouped_matmul_pallas_impl`).
+
+    Forward-only: differentiating this raw entry point raises a clear
+    ``NotImplementedError`` naming the differentiable ops-level wrapper and
+    the ``REPRO_USE_PALLAS`` fallback env var.
+    """
+    return _grouped_matmul_pallas_cv(block_m, block_n, block_k, interpret,
+                                     x, w, tile_group)

@@ -127,10 +127,10 @@ def _spmm_ell_kernel(idx_sref, idx_ref, w_ref, x_hbm, out_ref, gather, sems,
     jax.jit,
     static_argnames=("block_rows", "block_feat", "reduce", "interpret"),
 )
-def spmm_ell_pallas(ell_idx: jnp.ndarray, ell_w: Optional[jnp.ndarray],
-                    x: jnp.ndarray, *, block_rows: int = DEFAULT_BR,
-                    block_feat: int = DEFAULT_BF, reduce: str = "sum",
-                    interpret: bool = False) -> jnp.ndarray:
+def _spmm_ell_pallas_impl(ell_idx: jnp.ndarray, ell_w: Optional[jnp.ndarray],
+                          x: jnp.ndarray, *, block_rows: int = DEFAULT_BR,
+                          block_feat: int = DEFAULT_BF, reduce: str = "sum",
+                          interpret: bool = False) -> jnp.ndarray:
     """Blocked-ELL SpMM: out[r] = reduce_k w[r,k] * x[ell_idx[r,k]].
 
     Args:
@@ -179,3 +179,34 @@ def spmm_ell_pallas(ell_idx: jnp.ndarray, ell_w: Optional[jnp.ndarray],
         out_shape=jax.ShapeDtypeStruct((rows, feat), x.dtype),
         interpret=interpret,
     )(ell_idx, ell_idx, ell_w, x)
+
+
+from repro.kernels import forward_only_pallas
+
+_spmm_ell_pallas_cv = forward_only_pallas(
+    lambda block_rows, block_feat, reduce, interpret, ell_idx, ell_w, x:
+        _spmm_ell_pallas_impl(ell_idx, ell_w, x, block_rows=block_rows,
+                              block_feat=block_feat, reduce=reduce,
+                              interpret=interpret),
+    num_static=4,
+    message=(
+        "spmm_ell_pallas is the raw Pallas kernel and has no backward rule "
+        "for this configuration. Differentiate through the ops-level entry "
+        "points instead (repro.kernels.spmm.ops.spmm_ell / "
+        "spmm_ell_bucketed carry a custom VJP over the same ELL buckets), "
+        "or set REPRO_USE_PALLAS=0 to dispatch the differentiable XLA "
+        "oracle."))
+
+
+def spmm_ell_pallas(ell_idx: jnp.ndarray, ell_w: Optional[jnp.ndarray],
+                    x: jnp.ndarray, *, block_rows: int = DEFAULT_BR,
+                    block_feat: int = DEFAULT_BF, reduce: str = "sum",
+                    interpret: bool = False) -> jnp.ndarray:
+    """Blocked-ELL SpMM Pallas kernel (see :func:`_spmm_ell_pallas_impl`).
+
+    Forward-only: differentiating this raw entry point raises a clear
+    ``NotImplementedError`` pointing at the ops-level wrappers (which carry
+    the custom VJP) and the ``REPRO_USE_PALLAS`` fallback env var.
+    """
+    return _spmm_ell_pallas_cv(block_rows, block_feat, reduce, interpret,
+                               ell_idx, ell_w, x)

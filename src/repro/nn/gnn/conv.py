@@ -147,7 +147,8 @@ class GATConv(MessagePassing):
         }
 
     def apply(self, params, x, edge_index, num_nodes: Optional[int] = None,
-              message_callback=None, return_attention: bool = False, **kw):
+              message_callback=None, return_attention: bool = False,
+              edge_mask: Optional[jnp.ndarray] = None, **kw):
         n = num_nodes if num_nodes is not None else x.shape[0]
         h, f = self.heads, self.out_per_head
         z = self.lin.apply(params["lin"], x).reshape(-1, h, f)
@@ -161,6 +162,8 @@ class GATConv(MessagePassing):
         logits = jax.nn.leaky_relu(logits, self.negative_slope)
         alpha = softmax_ops.segment_softmax(logits, dst, n)  # (E, H)
         msg = z[src] * alpha[..., None]  # (E, H, F)
+        if edge_mask is not None:  # explainer soft mask (GAT materialises
+            msg = msg * edge_mask[:, None, None].astype(msg.dtype)  # anyway)
         if message_callback is not None:  # explainer hook on edge messages
             msg = message_callback(msg.reshape(msg.shape[0], -1)).reshape(
                 msg.shape)

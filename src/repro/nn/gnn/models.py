@@ -23,6 +23,11 @@ _CONVS = {"gcn": GCNConv, "sage": SAGEConv, "gin": GINConv, "gat": GATConv,
 
 
 class BasicGNN(Module):
+    # Explainers may pass their soft edge mask as `edge_mask` (fused-path
+    # reweighting through the kernels' custom VJPs) instead of a
+    # message_callback (which forces edge-level materialisation).
+    supports_edge_mask = True
+
     def __init__(self, conv: str, in_features: int, hidden: int,
                  out_features: int, num_layers: int, **conv_kwargs):
         self.conv_name = conv
@@ -45,13 +50,17 @@ class BasicGNN(Module):
               num_nodes: Optional[int] = None,
               num_sampled_nodes_per_hop: Optional[Sequence[int]] = None,
               num_sampled_edges_per_hop: Optional[Sequence[int]] = None,
-              trim: bool = False, message_callback=None):
+              trim: bool = False, message_callback=None, edge_mask=None):
         """Forward. With ``trim=True`` the per-hop sampler budgets drive
         progressive static slicing (paper C8).
 
         For degree-normalised convs (GCN) the normalisation is computed ONCE
         on the full batch graph and *sliced* alongside edges/nodes, so
         trimming preserves seed outputs exactly (the paper's invariant).
+        ``edge_mask`` (explainer soft mask) reweighs every edge's message
+        multiplicatively *without* leaving the fused path — per layer it is
+        sliced to the surviving (prefix) edge set, exactly like the GCN
+        normalisation weights.
         """
         edge_weight = self_weight = None
         if self.conv_name == "gcn":
@@ -74,6 +83,11 @@ class BasicGNN(Module):
             if self.conv_name == "gcn":
                 extra = {"edge_weight": edge_weight,
                          "self_weight": self_weight}
+            if edge_mask is not None:
+                n_e = (edge_index.num_edges if hasattr(edge_index,
+                                                       "num_edges")
+                       else edge_index.shape[1])
+                extra["edge_mask"] = edge_mask[:n_e]
             x = conv.apply(params[f"conv{i}"], x, edge_index, num_nodes=n,
                            message_callback=message_callback, **extra)
             if i < len(self.convs) - 1:

@@ -305,9 +305,11 @@ def test_hetero_trim_preserves_seed_outputs(rng):
                   trim=True)
 
 
-def test_trim_keeps_ell_fast_path(rng):
+def test_trim_keeps_ell_fast_path(rng, monkeypatch):
     """trim_to_layer must carry a masked static-layout ELL (not drop it) and
-    the masked cache must agree with the oracle on the trimmed graph."""
+    the masked cache must agree with the oracle on the trimmed graph —
+    including *weighted* matmuls, whose per-edge weights gather through the
+    COO-keyed ``ell_pos`` instead of detouring to the oracle."""
     d = Data(x=rng.standard_normal((200, 16)).astype(np.float32),
              edge_index=np.stack([rng.integers(0, 200, 1200),
                                   rng.integers(0, 200, 1200)]))
@@ -315,7 +317,7 @@ def test_trim_keeps_ell_fast_path(rng):
                                  prefill_ell=True)))
     x_t, ei_t, _ = trim_to_layer(1, b.num_sampled_nodes,
                                  b.num_sampled_edges, b.x, b.edge_index)
-    assert ei_t._ell is not None and ei_t._ell_trimmed
+    assert ei_t._ell is not None
     # identical shapes to the parent's cache (jit-stable across layers)
     assert [tuple(a.shape for a in bk) for bk in ei_t._ell] == \
            [tuple(a.shape for a in bk) for bk in b.edge_index._ell]
@@ -325,10 +327,15 @@ def test_trim_keeps_ell_fast_path(rng):
         ref = raw.matmul(x_t, reduce=reduce, force_pallas=False)
         np.testing.assert_allclose(np.asarray(fast), np.asarray(ref),
                                    rtol=1e-4, atol=1e-4)
-    # weighted matmul on an inherited ELL must NOT trust stale positions:
-    # it falls back to the (correct) oracle
+    # weighted matmul on the inherited (masked) ELL rides the Pallas kernel
+    # — no oracle fallback — and still matches the oracle numerically
+    calls = []
+    real = spmm_ops.spmm_ell_pallas
+    monkeypatch.setattr(spmm_ops, "spmm_ell_pallas",
+                        lambda *a, **k: (calls.append(1), real(*a, **k))[1])
     w = jnp.asarray(rng.standard_normal(ei_t.num_edges).astype(np.float32))
     got = ei_t.matmul(x_t, edge_weight=w, force_pallas=True)
+    assert calls, "weighted trimmed matmul fell back off the Pallas path"
     ref = raw.matmul(x_t, edge_weight=w, force_pallas=False)
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                rtol=1e-4, atol=1e-4)
