@@ -26,6 +26,7 @@ def main() -> None:
         ("spmm_loader_step", spmm_bench.run_loader_step),
         ("spmm_train_step", spmm_bench.run_train_step),
         ("spmm_hetero_step", spmm_bench.run_hetero_step),
+        ("spmm_gat_step", spmm_bench.run_gat_step),
         ("explainer_fidelity", explainer_fidelity.run),
     ]
     failed = []

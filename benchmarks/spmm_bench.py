@@ -450,8 +450,114 @@ def run_hetero_step(out_path: str = "BENCH_spmm.json") -> None:
     append_cell(out_path, rec)
 
 
+def run_gat_step(out_path: str = "BENCH_spmm.json") -> None:
+    """Materialised-oracle vs fused-kernel jit'd GAT train step (this PR).
+
+    A NeighborLoader batch with host-prefilled static ELL caches drives a
+    jit'd ``value_and_grad`` GATConv step twice: once on the materialised
+    oracle path (``(E, H, F)`` edge messages + XLA segment softmax) and
+    once on the fused flash-GAT attention kernel, whose ops-level custom
+    VJP runs the softmax backward over the same ELL panels. Verifies
+    gradient parity and ONE trace per variant across batches, then times
+    both. Off-TPU the kernel runs in interpret mode, so its timing lands
+    under ``step_grad_kernel_interpret_us`` and uses a deliberately small
+    cell. Appends a ``gat_step`` record to ``BENCH_spmm.json``.
+    """
+    import time
+
+    from repro.core.edge_index import EdgeIndex
+    from repro.data.data import Data
+    from repro.data.loader import NeighborLoader
+    from repro.nn.gnn.conv import GATConv
+
+    on_tpu = jax.default_backend() == "tpu"
+    rng = np.random.default_rng(19)
+    n, e, feat, hidden, heads = 2048, 16384, 64, 32, 4
+    batch_size, fanouts = (64, [10, 5]) if on_tpu else (8, [4, 2])
+    data = Data(x=rng.standard_normal((n, feat)).astype(np.float32),
+                edge_index=np.stack([rng.integers(0, n, e),
+                                     rng.integers(0, n, e)]),
+                y=rng.integers(0, 4, n))
+    loader = NeighborLoader(data, data, num_neighbors=fanouts,
+                            batch_size=batch_size, shuffle=True,
+                            prefill_ell=True, seed=0)
+    conv = GATConv(feat, hidden, heads=heads)
+    params = conv.init(jax.random.PRNGKey(0))
+    traces = {"oracle": [], "kernel": []}
+
+    # GATConv dispatches through use_pallas(); flip the env var around each
+    # variant's trace — the compiled artifacts keep their path afterwards.
+    def make_step(use_pallas_env: str, tag: str):
+        @jax.jit
+        def step(params, batch):
+            traces[tag].append(1)  # trace counter: must stay at 1
+
+            def loss_fn(p):
+                ei = (batch.edge_index if use_pallas_env == "1" else
+                      EdgeIndex(batch.edge_index.data, batch.num_nodes,
+                                batch.num_nodes))
+                out = conv.apply(p, batch.x, ei)
+                return (out[batch.seed_slots] ** 2).mean()
+
+            return jax.value_and_grad(loss_fn)(params)
+
+        return step
+
+    it = iter(loader)
+    batches = [next(it) for _ in range(4)]
+
+    prev = os.environ.get("REPRO_USE_PALLAS")
+    try:
+        os.environ["REPRO_USE_PALLAS"] = "0"
+        step_oracle = make_step("0", "oracle")
+        lo, go = step_oracle(params, batches[0])
+        os.environ["REPRO_USE_PALLAS"] = "1"
+        step_kernel = make_step("1", "kernel")
+        lk, gk = step_kernel(params, batches[0])
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_USE_PALLAS", None)
+        else:
+            os.environ["REPRO_USE_PALLAS"] = prev
+    lo.block_until_ready(), lk.block_until_ready()
+    diffs = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.abs(a - b).max()), go, gk)
+    max_diff = max(jax.tree_util.tree_leaves(diffs))
+    assert max_diff < 1e-5, f"fused GAT grad != oracle grad: {max_diff}"
+
+    def time_over_batches(fn, rounds: int = 3):
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            for b in batches:
+                fn(params, b)[0].block_until_ready()
+        return (time.perf_counter() - t0) / (rounds * len(batches)) * 1e6
+
+    oracle_us = time_over_batches(step_oracle)
+    kernel_us = time_over_batches(step_kernel)
+    assert len(traces["oracle"]) == 1 and len(traces["kernel"]) == 1, \
+        f"recompiled across batches: {traces}"
+
+    key = "step_grad_kernel_us" if on_tpu else "step_grad_kernel_interpret_us"
+    rec = {
+        "cell": "gat_step",
+        "backend": jax.default_backend(),
+        "nodes": n, "edges": e, "feat": feat, "heads": heads,
+        "batch_size": batch_size, "fanouts": fanouts,
+        "step_grad_oracle_us": oracle_us,
+        key: kernel_us,
+        "trace_count_oracle": len(traces["oracle"]),
+        "trace_count_kernel": len(traces["kernel"]),
+        "grad_max_abs_diff": max_diff,
+    }
+    emit("spmm/gat_step/grad_oracle_us", oracle_us)
+    emit(f"spmm/gat_step/{key.removeprefix('step_')}", kernel_us,
+         f"grad_max_abs_diff={max_diff:.2e}")
+    append_cell(out_path, rec)
+
+
 if __name__ == "__main__":
     run()
     run_loader_step()
     run_train_step()
     run_hetero_step()
+    run_gat_step()

@@ -10,7 +10,8 @@ this metadata to pick the optimal compute path:
 * cached CSC     -> cheap backward (no re-derivation of ``A^T`` per step)
 * undirected     -> ``A == A^T``; a single cache serves both directions
 * cached ELL     -> degree-bucketed blocked-ELL packing feeding the Pallas
-  pipelined SpMM kernel on TPU (the demand-filled TPU fast path)
+  pipelined SpMM kernel on TPU (the demand-filled TPU fast path); the same
+  buckets serve the fused flash-GAT attention aggregation (:meth:`attend`)
 
 This mirrors ``torch_geometric.EdgeIndex`` semantics adapted to JAX: the
 object is a registered pytree (arrays are leaves, metadata is static), so it
@@ -336,6 +337,60 @@ class EdgeIndex:
         w = None if edge_weight is None else edge_weight[perm]
         return spmm_ops.spmm_csr(rowptr, col, x, w,
                                  num_rows=self.num_src_nodes, reduce=reduce)
+
+    # ------------------------------------------------------------------ attend
+    def attend(self, z: jnp.ndarray, alpha_src: jnp.ndarray,
+               alpha_dst: jnp.ndarray, *, negative_slope: float = 0.2,
+               edge_weight: Optional[jnp.ndarray] = None,
+               transpose: bool = False, return_attention: bool = False,
+               force_pallas: Optional[bool] = None,
+               interpret: Optional[bool] = None):
+        """Attention-weighted aggregation (GAT semantics) over A (or A^T).
+
+        ``out[i] = sum_j softmax_j(leaky_relu(alpha_src[j] + alpha_dst[i]))
+        * w_ij * z[j]`` with ``z`` of shape (N, H, F) and the alpha halves
+        dense per-node (N, H) vectors — ``alpha_src`` keyed by the *message
+        sender* nodes (gathered through the neighbor table), ``alpha_dst``
+        by the receivers (the table's rows). For ``transpose=True`` the
+        roles ride the CSR-derived transpose table, so the caller passes
+        the halves already swapped into sender/receiver position.
+
+        Mirrors :meth:`matmul`'s dispatch tree: with a (loader-prefilled or
+        demand-filled) ELL cache and Pallas dispatch on, the fused flash-GAT
+        kernel runs one launch per bucket (differentiable via the ops-level
+        custom VJP — no ``(E, H, F)`` edge-message materialisation);
+        otherwise — CPU/GPU, or tracing without a packed cache — the COO
+        segment oracle runs. ``edge_weight`` (COO order — the folded
+        explainer mask) multiplies messages *after* the softmax, no
+        renormalisation. ``return_attention`` additionally returns the
+        per-edge (E, H) coefficients, recovered on the fused path by
+        scattering the panel softmax through the COO-keyed ``ell_pos``.
+        """
+        from repro.kernels import use_pallas
+        from repro.kernels.attention import ops as attn_ops
+        from repro.kernels.attention import ref as attn_ref
+        num_rows = self.num_src_nodes if transpose else self.num_dst_nodes
+        take_pallas = use_pallas() if force_pallas is None else force_pallas
+        if take_pallas:
+            ell = self.get_ell(transpose=transpose)
+            if ell is not None:
+                out = attn_ops.gat_attend_ell(
+                    ell, alpha_src, alpha_dst, z, edge_weight,
+                    num_rows=num_rows, negative_slope=negative_slope,
+                    force_pallas=take_pallas, interpret=interpret)
+                if not return_attention:
+                    return out
+                alpha = attn_ops.gat_alpha_ell(
+                    ell, alpha_src, alpha_dst, num_edges=self.num_edges,
+                    negative_slope=negative_slope)
+                return out, alpha
+        # COO oracle: CPU/GPU dispatch, or tracing without a packed cache.
+        send, recv = (self.dst, self.src) if transpose else (self.src,
+                                                             self.dst)
+        out, alpha = attn_ref.gat_attend_coo(
+            send, recv, alpha_src, alpha_dst, z, num_rows=num_rows,
+            negative_slope=negative_slope, edge_weight=edge_weight)
+        return (out, alpha) if return_attention else out
 
     # ------------------------------------------------------------------ utility
     def to_undirected(self) -> "EdgeIndex":

@@ -17,6 +17,12 @@ edge type — into a single grouped matmul (one MXU launch instead of
 (``kernels/grouped_matmul``, DESIGN.md §4). Cross-type aggregation
 accumulates in place instead of materialising a stacked tensor.
 
+Attention convs (``GATConv``) don't decompose into aggregate-then-project,
+so they skip the grouped-projection path — but each relation's bipartite
+``propagate`` still lowers to the *fused attention* kernel
+(``EdgeIndex.attend`` over the loader-prefilled per-relation ELL caches),
+so a hetero GAT keeps every relation on the Pallas fast path.
+
 ``GroupedLinear`` exposes the raw {H_T W_T} grouped projection for callers
 that manage their own per-type features.
 """

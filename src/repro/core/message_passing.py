@@ -11,6 +11,12 @@ with overridable ``message`` (g), first-class ``aggr`` ({{.}}) and ``update``
   CSC gather/segment ops transpose to CSR ones, so the cache serves both
   directions — the paper's "caching CSR/CSC significantly reduces overhead
   during the backward pass").
+* **Fused attention path** — attention-semantics steps (``alpha=...``, the
+  GAT family) lower to ``EdgeIndex.attend``: the fused flash-GAT Pallas
+  kernel over the same blocked-ELL buckets as the SpMM fast path (one VMEM
+  pass: gather -> leaky-relu -> online masked softmax -> weighted
+  accumulate), with the COO segment-softmax oracle as the CPU/GPU and
+  traced-without-cache fallback.
 * **Edge-level materialisation path** — custom messages, edge attributes, or
   an explainability callback ``c`` (paper §2.4) force gather->message->
   aggregate. This is the paper's fallback path, and the one the Explainer
@@ -62,7 +68,10 @@ class MessagePassing(Module):
                   edge_weight: Optional[jnp.ndarray] = None,
                   num_nodes: Optional[int] = None,
                   message_callback: Optional[Callable] = None,
-                  edge_mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+                  edge_mask: Optional[jnp.ndarray] = None,
+                  alpha: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+                  negative_slope: float = 0.2,
+                  return_attention: bool = False) -> jnp.ndarray:
         """Run one message-passing step, choosing the optimal compute path.
 
         ``edge_mask`` is a per-edge multiplicative reweighting (the
@@ -70,10 +79,22 @@ class MessagePassing(Module):
         unlike ``message_callback`` it does NOT force edge-level
         materialisation: default-message convs keep the fused SpMM path, and
         gradients w.r.t. the mask flow through the kernel's custom VJP.
+
+        ``alpha`` switches the step to *attention semantics* (GAT): a pair
+        of dense per-node logit halves ``(alpha_src, alpha_dst)`` keyed to
+        the graph's (src, dst) node sides; messages become softmax-weighted
+        source features. The fused predicate extends to this mode — see
+        :meth:`_propagate_attention`.
         """
         if edge_mask is not None:
             edge_weight = (edge_mask if edge_weight is None
                            else edge_weight * edge_mask)
+        if alpha is not None:
+            return self._propagate_attention(
+                params, edge_index, x, alpha, edge_weight=edge_weight,
+                num_nodes=num_nodes, message_callback=message_callback,
+                negative_slope=negative_slope,
+                return_attention=return_attention)
         if isinstance(x, tuple):
             x_src, x_dst = x
         else:
@@ -134,3 +155,73 @@ class MessagePassing(Module):
                               else {}, msg, dst, n_dst, ptr=ptr)
         return out if self._update_is_default() else self.update(
             params, out, x_dst)
+
+    # -- attention semantics ---------------------------------------------------
+    def _propagate_attention(self, params, edge_index, z: ArrayOrPair,
+                             alpha, *, edge_weight: Optional[jnp.ndarray],
+                             num_nodes: Optional[int],
+                             message_callback: Optional[Callable],
+                             negative_slope: float,
+                             return_attention: bool):
+        """Attention-weighted aggregation (the GAT step), fused when it can.
+
+        ``z`` is (N, H, F) per-head features (or a bipartite (src, dst)
+        pair), ``alpha`` the per-node logit halves keyed to the graph's
+        (src, dst) sides — the conv computes them with the attention vector
+        matching each side's *role* under its flow. The widened fused
+        predicate: a default attention message (no ``message_callback``)
+        over an ``EdgeIndex`` lowers to :meth:`EdgeIndex.attend`, which
+        dispatches the fused flash-GAT Pallas kernel when an ELL cache is
+        packed (loader-prefilled batches, ``fill_cache()``, or eager demand
+        fill) and the COO segment oracle otherwise — no ``(E, H, F)``
+        edge-message tensor on the kernel path, and the explainer's
+        ``edge_mask`` (already folded into ``edge_weight`` by
+        :meth:`propagate`) stays fused as a post-softmax per-slot weight.
+        ``target_to_source`` flow rides the transpose (CSR-derived) table
+        with the sender/receiver roles swapped.
+
+        The aggregation is the attention-weighted sum *by definition* —
+        ``self.aggr`` is not consulted in this mode. An overridden
+        ``update`` hook still runs (on the per-head aggregate, with the
+        receiver-side projected features as its ``x`` argument).
+        """
+        z_src, z_dst = z if isinstance(z, tuple) else (z, z)
+        a_src, a_dst = alpha
+        transpose = self.flow == "target_to_source"
+        if transpose:
+            z_send, z_recv, a_send, a_recv = z_dst, z_src, a_dst, a_src
+        else:
+            z_send, z_recv, a_send, a_recv = z_src, z_dst, a_src, a_dst
+
+        if message_callback is None and isinstance(edge_index, EdgeIndex):
+            res = edge_index.attend(
+                z_send, a_send, a_recv, negative_slope=negative_slope,
+                edge_weight=edge_weight, transpose=transpose,
+                return_attention=return_attention)
+        else:
+            # edge-level materialisation: raw edge arrays, or an explainer
+            # callback that must observe every (E, H*F) message — the same
+            # COO oracle EdgeIndex.attend falls back to (shared helper, so
+            # fused-vs-fallback numerics cannot drift between entry points)
+            from repro.kernels.attention import ref as attn_ref
+            if isinstance(edge_index, EdgeIndex):
+                send, recv = edge_index.src, edge_index.dst
+                n_out = (edge_index.num_src_nodes if transpose
+                         else edge_index.num_dst_nodes)
+            else:
+                send, recv = edge_index[0], edge_index[1]
+                n_out = (num_nodes if num_nodes is not None
+                         else z_recv.shape[0])
+            if transpose:
+                send, recv = recv, send
+            out, alpha_e = attn_ref.gat_attend_coo(
+                send, recv, a_send, a_recv, z_send, num_rows=n_out,
+                negative_slope=negative_slope, edge_weight=edge_weight,
+                message_callback=message_callback)
+            res = (out, alpha_e) if return_attention else out
+        if self._update_is_default():
+            return res
+        if return_attention:
+            out, alpha_e = res
+            return self.update(params, out, z_recv), alpha_e
+        return self.update(params, res, z_recv)

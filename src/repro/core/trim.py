@@ -16,9 +16,16 @@ dropped-hop slots masked to capacity padding — a shape-stable elementwise
 layers (see ``_trim_ell``). Because ``EdgeIndex`` keys ``ell_pos`` to COO
 edge order and kept slots reference only kept (prefix) edges, the masked
 cache serves *weighted* matmuls too — per-layer ``edge_weight`` slices
-gather straight through the inherited positions, no oracle detour.
-``trim_to_layer_hetero`` applies the same per-(node type, edge type) — deep
-hetero GNNs keep every relation on the fast path as they trim.
+gather straight through the inherited positions, no oracle detour. The
+masked cache equally serves the fused *attention* path
+(``EdgeIndex.attend``): kept rows keep their neighbor slots, dropped rows
+become capacity padding the kernel softmax masks out, so deep GATs keep
+the flash-GAT kernel on inner hops. A demand-filled *transpose* ELL
+survives too (``_trim_ell_transpose`` — per-slot masking, since transpose
+rows' out-edges don't form a hop prefix), keeping reversed-flow
+(``target_to_source``) attends and transpose matmuls on the kernel.
+``trim_to_layer_hetero`` applies the same per-(node type, edge type) —
+deep hetero GNNs keep every relation on the fast path as they trim.
 """
 
 from __future__ import annotations
@@ -68,14 +75,37 @@ def _trim_ell(ell, boundary: int):
     return tuple(trimmed)
 
 
+def _trim_ell_transpose(ell, n_edges: int):
+    """Mask a *transpose* (CSR-derived) bucketed ELL down to kept edges.
+
+    Unlike the forward table, a transpose row's (source node's) out-edges
+    span arbitrary hops, so kept slots do NOT form a row prefix — instead
+    each slot is kept iff its COO-keyed ``ell_pos`` references a surviving
+    (prefix) edge. Shape-stable elementwise ``where``, valid on tracers;
+    rows whose slots all drop become empty rows (0 output, the oracle's
+    empty-segment convention). Keeps reversed-flow (``transpose=True``)
+    SpMM and fused-attention dispatch on the kernel for inner layers.
+    """
+    if ell is None:
+        return None
+    trimmed = []
+    for row_ids, ell_idx, ell_pos in ell:
+        keep = (ell_pos >= 0) & (ell_pos < n_edges)
+        trimmed.append((row_ids,
+                        jnp.where(keep, ell_idx, -1),
+                        jnp.where(keep, ell_pos, -1)))
+    return tuple(trimmed)
+
+
 def _trim_edge_index(edge_index: EdgeIndex, n_src: int, n_dst: int,
                      n_edges: int, recv_boundary: int) -> EdgeIndex:
-    """Static COO slice + ELL mask; CSR/CSC caches are dropped (their edge
+    """Static COO slice + ELL masks; CSR/CSC caches are dropped (their edge
     dimension is data-dependent after a trim) and re-derived on demand."""
     return EdgeIndex(
         edge_index.data[:, :n_edges], n_src, n_dst,
         edge_index.sort_order, edge_index.is_undirected,
-        _ell=_trim_ell(edge_index._ell, recv_boundary))
+        _ell=_trim_ell(edge_index._ell, recv_boundary),
+        _ell_t=_trim_ell_transpose(edge_index._ell_t, n_edges))
 
 
 def trim_to_layer(layer: int, num_nodes_per_hop: Sequence[int],

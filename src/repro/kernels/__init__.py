@@ -9,7 +9,11 @@ Each kernel lives in its own subpackage with three files:
 Kernels:
   spmm             blocked-ELL sparse @ dense (message-passing fast path, C2)
   grouped_matmul   per-group GEMM {H_T W_T} (hetero projections C4 + MoE experts)
-  segment_softmax  softmax over variable-length segments (GAT, explainer masks)
+  attention        fused flash-GAT aggregation (gather -> leaky-relu ->
+                   online masked softmax -> weighted accumulate) over the
+                   same blocked-ELL buckets as spmm
+  segment_softmax  softmax over variable-length segments (GAT oracle path,
+                   explainer masks)
   flash_attention  online-softmax attention (LM prefill/train path)
 """
 

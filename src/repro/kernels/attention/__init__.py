@@ -1,0 +1,7 @@
+"""Fused GAT attention aggregation over the bucketed blocked-ELL layout.
+
+``gat_attention.py`` holds the Pallas flash-GAT kernel (online masked
+softmax + pipelined DMA gathers), ``ops.py`` the differentiable dispatching
+wrappers (``gat_attend_ell`` / ``gat_alpha_ell``), ``ref.py`` the panel
+oracle.
+"""

@@ -1,0 +1,250 @@
+"""Fused GAT attention aggregation — blocked-ELL Pallas TPU kernel.
+
+One kernel fuses the whole attention aggregation of a GAT layer over the
+same bucketed blocked-ELL layout the SpMM kernel consumes:
+
+    gather alpha_src[nbr] -> leaky-relu logits -> masked row softmax
+      -> weighted accumulate of z[nbr]
+
+in a single VMEM pass per row block (flash-GAT style): the softmax runs
+*online* — a running max / running sum rescale the feature accumulator as
+neighbor columns stream in — so the ``(E, H, F)`` edge-message tensor of the
+materialised path is never built. Per neighbor column the kernel issues two
+batches of async HBM->VMEM copies (the ``(1, F)`` feature row and the
+``(1, H)`` ``alpha_src`` row of each neighbor), double-buffered exactly like
+the SpMM kernel's pipelined gather, with the scalar-prefetched neighbor
+table as the DMA address stream.
+
+Layout: ``z`` arrives flattened to ``(N, H*F)`` so the head axis rides the
+feature grid dimension (the per-head feature slice starts at ``h * F``) and
+the DMA indexing stays 2-D. ``alpha_dst`` is pre-gathered per bucket row
+host/XLA-side (it is keyed by *row ids*, not by the neighbor table) and
+enters as a dense ``(R, H)`` VMEM panel.
+
+Grid: ``(num_row_blocks, heads, num_feat_blocks)``; each (row, head, feat)
+tile recomputes the cheap ``(BR, K)`` online softmax and is written once.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BR = 8
+DEFAULT_BF = 128
+_NUM_SLOTS = 2  # double buffering
+
+
+def _gat_ell_kernel(idx_sref, idx_ref, adst_ref, w_ref, asrc_hbm, z_hbm,
+                    out_ref, zgather, agather, sems, *, block_rows: int,
+                    block_feat: int, k: int, heads: int, feat: int,
+                    negative_slope: float, has_weight: bool):
+    """One (row_block, head, feat_block) tile: online-softmax accumulate.
+
+    ``idx_sref``   full (R, K) neighbor table, scalar-prefetched (SMEM) — the
+                   DMA address stream.
+    ``idx_ref``    (BR, K) VMEM panel of the same table — vectorized masking.
+    ``adst_ref``   (BR, H) VMEM panel: alpha_dst gathered per bucket row.
+    ``zgather``    (2, BR, BF) VMEM scratch — feature-row landing zone.
+    ``agather``    (2, BR, H) VMEM scratch — alpha_src-row landing zone.
+    ``sems``       (2, 2, BR) DMA semaphores: [0] features, [1] alphas.
+    """
+    r_blk = pl.program_id(0)
+    h = pl.program_id(1)
+    f_blk = pl.program_id(2)
+    row_base = r_blk * block_rows
+    # z is (N, H*F): head h's feature block starts at h*F + f_blk*BF.
+    f_start = h * feat + f_blk * block_feat
+
+    def z_dma(slot, kk, r):
+        nid = jnp.maximum(idx_sref[row_base + r, kk], 0)
+        return pltpu.make_async_copy(
+            z_hbm.at[pl.dslice(nid, 1), pl.dslice(f_start, block_feat)],
+            zgather.at[slot, pl.dslice(r, 1), :],
+            sems.at[0, slot, r],
+        )
+
+    def a_dma(slot, kk, r):
+        nid = jnp.maximum(idx_sref[row_base + r, kk], 0)
+        return pltpu.make_async_copy(
+            asrc_hbm.at[pl.dslice(nid, 1), :],
+            agather.at[slot, pl.dslice(r, 1), :],
+            sems.at[1, slot, r],
+        )
+
+    def start_column(slot, kk):
+        def body_r(r, carry):
+            z_dma(slot, kk, r).start()
+            a_dma(slot, kk, r).start()
+            return carry
+        jax.lax.fori_loop(0, block_rows, body_r, 0)
+
+    def wait_column(slot, kk):
+        def body_r(r, carry):
+            z_dma(slot, kk, r).wait()
+            a_dma(slot, kk, r).wait()
+            return carry
+        jax.lax.fori_loop(0, block_rows, body_r, 0)
+
+    idx_panel = idx_ref[...]  # (BR, K)
+    adst_col = jax.lax.dynamic_slice_in_dim(
+        adst_ref[...].astype(jnp.float32), h, 1, 1)  # (BR, 1): this head
+    if has_weight:
+        w_panel = w_ref[...].astype(jnp.float32)
+
+    # Warm-up: put column 0 in flight before entering the steady state.
+    start_column(0, 0)
+
+    m0 = jnp.full((block_rows, 1), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((block_rows, 1), jnp.float32)
+    acc0 = jnp.zeros((block_rows, block_feat), jnp.float32)
+
+    def body_k(kk, carry):
+        m, l, acc = carry
+        slot = jax.lax.rem(kk, _NUM_SLOTS)
+
+        # Prefetch column kk+1 into the other slot while kk lands/computes.
+        @pl.when(kk + 1 < k)
+        def _():
+            start_column(1 - slot, kk + 1)
+
+        wait_column(slot, kk)
+        ztile = zgather[slot].astype(jnp.float32)   # (BR, BF)
+        arows = agather[slot].astype(jnp.float32)   # (BR, H)
+        a_col = jax.lax.dynamic_slice_in_dim(arows, h, 1, 1)  # (BR, 1)
+
+        col_idx = jax.lax.dynamic_slice_in_dim(idx_panel, kk, 1, 1)  # (BR, 1)
+        valid = col_idx >= 0
+        logit = a_col + adst_col
+        logit = jnp.where(logit >= 0, logit, negative_slope * logit)
+        logit = jnp.where(valid, logit, -jnp.inf)
+
+        # Online softmax: rescale the accumulator by exp(m - m_new). While a
+        # row has seen no valid neighbor m is -inf and every term is 0.
+        m_new = jnp.maximum(m, logit)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.where(valid, jnp.exp(logit - m_safe), 0.0)    # (BR, 1)
+        corr = jnp.exp(m - m_safe)  # exp(-inf) = 0 zeroes the empty prefix
+        num = p if not has_weight else p * jax.lax.dynamic_slice_in_dim(
+            w_panel, kk, 1, 1)
+        return m_new, l * corr + p, acc * corr + num * ztile
+
+    _, l, acc = jax.lax.fori_loop(0, k, body_k, (m0, l0, acc0))
+    # acc/l = sum_k softmax_k(logits) * w_k * z_k; empty rows stay 0.
+    out_ref[...] = (acc / jnp.maximum(l, 1e-16)).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("negative_slope", "block_rows", "block_feat",
+                     "interpret"),
+)
+def _gat_ell_pallas_impl(ell_idx: jnp.ndarray, adst: jnp.ndarray,
+                         ell_w: Optional[jnp.ndarray], alpha_src: jnp.ndarray,
+                         z2d: jnp.ndarray, *, negative_slope: float = 0.2,
+                         block_rows: int = DEFAULT_BR,
+                         block_feat: Optional[int] = None,
+                         interpret: bool = False) -> jnp.ndarray:
+    """Fused GAT aggregation over one blocked-ELL bucket.
+
+    Args:
+      ell_idx:   (R, K) int32 neighbor table, -1 = padding. R % BR == 0.
+      adst:      (R, H) alpha_dst values of each bucket row (receiver term).
+      ell_w:     optional (R, K) per-slot post-softmax weights (edge_mask /
+                 edge_weight gathered through ``ell_pos``).
+      alpha_src: (N, H) dense per-node sender term (gathered in-kernel).
+      z2d:       (N, H*F) head-flattened features (gathered in-kernel).
+
+    Returns ``(R, H*F)``: per row, head h's slice is the attention-weighted
+    neighbor sum for that head.
+    """
+    rows, k = ell_idx.shape
+    heads = adst.shape[1]
+    hf = z2d.shape[1]
+    assert hf % heads == 0, (hf, heads)
+    feat = hf // heads
+    if block_feat is None:  # lane-width tile when it divides, else whole F
+        block_feat = DEFAULT_BF if feat % DEFAULT_BF == 0 else feat
+    assert rows % block_rows == 0, (rows, block_rows)
+    assert feat % block_feat == 0, (feat, block_feat)
+    assert k >= 1, "ELL table must have at least one neighbor column"
+    nfb = feat // block_feat
+    grid = (rows // block_rows, heads, nfb)
+
+    has_weight = ell_w is not None
+    if ell_w is None:  # dummy operand keeps the signature static
+        ell_w = jnp.zeros((block_rows, k), jnp.float32)
+
+    kernel = functools.partial(
+        _gat_ell_kernel, block_rows=block_rows, block_feat=block_feat, k=k,
+        heads=heads, feat=feat, negative_slope=float(negative_slope),
+        has_weight=has_weight)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,  # the neighbor table: DMA address stream
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, k), lambda i, h, j, idx: (i, 0)),
+            pl.BlockSpec((block_rows, heads), lambda i, h, j, idx: (i, 0)),
+            pl.BlockSpec((block_rows, k), lambda i, h, j, idx: (i, 0))
+            if has_weight else
+            pl.BlockSpec((block_rows, k), lambda i, h, j, idx: (0, 0)),
+            # alpha_src and z stay in HBM; the kernel DMA-gathers rows out.
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec((block_rows, block_feat),
+                               lambda i, h, j, idx: (i, h * nfb + j)),
+        scratch_shapes=[
+            pltpu.VMEM((_NUM_SLOTS, block_rows, block_feat), z2d.dtype),
+            pltpu.VMEM((_NUM_SLOTS, block_rows, heads), alpha_src.dtype),
+            pltpu.SemaphoreType.DMA((2, _NUM_SLOTS, block_rows)),
+        ],
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((rows, hf), z2d.dtype),
+        interpret=interpret,
+    )(ell_idx, ell_idx, adst, ell_w, alpha_src, z2d)
+
+
+from repro.kernels import forward_only_pallas
+
+_gat_ell_pallas_cv = forward_only_pallas(
+    lambda negative_slope, block_rows, block_feat, interpret, ell_idx, adst,
+    ell_w, alpha_src, z2d:
+        _gat_ell_pallas_impl(ell_idx, adst, ell_w, alpha_src, z2d,
+                             negative_slope=negative_slope,
+                             block_rows=block_rows, block_feat=block_feat,
+                             interpret=interpret),
+    num_static=4,
+    message=(
+        "gat_ell_pallas is the raw Pallas kernel and has no backward rule. "
+        "Differentiate through the ops-level entry points instead "
+        "(repro.kernels.attention.ops.gat_attend_ell carries a custom VJP "
+        "— the softmax backward over the same ELL panels), or set "
+        "REPRO_USE_PALLAS=0 to dispatch the differentiable XLA oracle."))
+
+
+def gat_ell_pallas(ell_idx: jnp.ndarray, adst: jnp.ndarray,
+                   ell_w: Optional[jnp.ndarray], alpha_src: jnp.ndarray,
+                   z2d: jnp.ndarray, *, negative_slope: float = 0.2,
+                   block_rows: int = DEFAULT_BR,
+                   block_feat: Optional[int] = None,
+                   interpret: bool = False) -> jnp.ndarray:
+    """Fused GAT attention kernel (see :func:`_gat_ell_pallas_impl`).
+
+    Forward-only: differentiating this raw entry point raises a clear
+    ``NotImplementedError`` pointing at the ops-level wrapper (which carries
+    the custom VJP) and the ``REPRO_USE_PALLAS`` fallback env var.
+    """
+    return _gat_ell_pallas_cv(float(negative_slope), block_rows, block_feat,
+                              interpret, ell_idx, adst, ell_w, alpha_src,
+                              z2d)

@@ -1,0 +1,221 @@
+"""Public fused-attention entry points with kernel/oracle dispatch.
+
+The GAT aggregation analogue of ``kernels.spmm.ops``: the same bucketed
+blocked-ELL layout (``EllBucket`` triples from the SpMM packers, ``ell_pos``
+keyed to COO edge order) drives a *fused* attention aggregation
+
+    out[r, h] = sum_k softmax_k(leaky_relu(a_src[nbr] + a_dst[r]))_k
+                * w[r, k] * z[nbr, h]
+
+per bucket: the Pallas flash-GAT kernel on TPU (or when forced), the panel
+oracle elsewhere. The Pallas branch is differentiable at this level — an
+ops-level ``jax.custom_vjp`` recomputes the softmax over the same panels and
+runs its backward (softmax VJP + leaky-relu VJP + masked scatter-adds into
+``alpha_src``/``z``) in XLA, exactly the PR-4 pattern for SpMM. The raw
+kernel entry point stays forward-only behind the shared
+``forward_only_pallas`` guard.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import use_pallas
+from repro.kernels.attention import ref
+from repro.kernels.attention.gat_attention import DEFAULT_BR, gat_ell_pallas
+from repro.kernels.spmm.ops import MAX_PREFETCH_ELEMS, EllBucket
+
+
+def _gat_ell_pallas_chunked(ell_idx: jnp.ndarray, adst: jnp.ndarray,
+                            ell_w: Optional[jnp.ndarray],
+                            alpha_src: jnp.ndarray, z: jnp.ndarray,
+                            negative_slope: float,
+                            interpret: bool) -> jnp.ndarray:
+    """The raw Pallas forward, row-chunked to the SMEM prefetch budget.
+
+    Calls the module-global ``gat_ell_pallas`` (not a captured reference) so
+    test spies that monkeypatch the ops attribute still observe every
+    launch. Returns (R, H, F).
+    """
+    rows, k = ell_idx.shape
+    heads, feat = z.shape[1], z.shape[2]
+    z2d = z.reshape(z.shape[0], heads * feat)
+    bf = 128 if feat % 128 == 0 else feat
+    chunk = max(MAX_PREFETCH_ELEMS // max(k, 1), DEFAULT_BR)
+    chunk -= chunk % DEFAULT_BR
+    if rows <= chunk:
+        out = gat_ell_pallas(ell_idx, adst, ell_w, alpha_src, z2d,
+                             negative_slope=negative_slope, block_feat=bf,
+                             interpret=interpret)
+        return out.reshape(rows, heads, feat)
+    outs = []
+    for lo in range(0, rows, chunk):
+        hi = min(lo + chunk, rows)
+        outs.append(gat_ell_pallas(
+            ell_idx[lo:hi], adst[lo:hi],
+            None if ell_w is None else ell_w[lo:hi], alpha_src, z2d,
+            negative_slope=negative_slope, block_feat=bf,
+            interpret=interpret))
+    return jnp.concatenate(outs, axis=0).reshape(rows, heads, feat)
+
+
+def _gat_panels_backward(ell_idx, adst, ell_w, alpha_src, z, dy,
+                         negative_slope: float):
+    """VJP of the fused attention w.r.t. (adst, ell_w, alpha_src, z).
+
+    Recomputes the masked softmax over the *same* panels the forward
+    consumed (cheap — (R, K, H)), then chains the softmax backward, the
+    leaky-relu backward, and two masked scatter-adds back into the dense
+    per-node operands. ``dy`` is (R, H, F).
+    """
+    mask = ell_idx >= 0
+    safe = jnp.maximum(ell_idx, 0)
+    a32 = alpha_src.astype(jnp.float32)
+    raw = a32[safe] + adst.astype(jnp.float32)[:, None, :]    # (R, K, H)
+    p = ref.gat_softmax_panels(ell_idx, adst, alpha_src,
+                               negative_slope=negative_slope)
+    p = p.astype(jnp.float32)
+    dy32 = dy.astype(jnp.float32)
+    zg = z[safe].astype(jnp.float32)                          # (R, K, H, F)
+    dyz = jnp.einsum("rhf,rkhf->rkh", dy32, zg)               # dL/d(p*w)
+    w32 = None if ell_w is None else ell_w.astype(jnp.float32)
+    dp = dyz if w32 is None else dyz * w32[..., None]
+    # masked-softmax backward over the K axis
+    ds = p * (dp - (p * dp).sum(axis=1, keepdims=True))
+    dlogit = ds * jnp.where(raw >= 0, 1.0, negative_slope)
+    dlogit = jnp.where(mask[..., None], dlogit, 0.0)
+    d_adst = dlogit.sum(axis=1).astype(adst.dtype)            # (R, H)
+    n = alpha_src.shape[0]
+    scatter_rows = jnp.where(mask, ell_idx, n).reshape(-1)
+    d_asrc = jnp.zeros(alpha_src.shape, jnp.float32).at[scatter_rows].add(
+        dlogit.reshape(-1, dlogit.shape[-1]), mode="drop").astype(
+        alpha_src.dtype)
+    pw = p if w32 is None else p * w32[..., None]
+    contrib = jnp.einsum("rkh,rhf->rkhf", pw, dy32)
+    d_z = jnp.zeros(z.shape, jnp.float32).at[scatter_rows].add(
+        contrib.reshape(-1, z.shape[1], z.shape[2]), mode="drop").astype(
+        z.dtype)
+    d_w = None
+    if ell_w is not None:
+        d_w = jnp.where(mask, (p * dyz).sum(-1), 0.0).astype(ell_w.dtype)
+    return d_adst, d_w, d_asrc, d_z
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _gat_ell_pallas_diff(negative_slope, interpret, ell_idx, adst, ell_w,
+                         alpha_src, z):
+    """Differentiable wrapper over the Pallas flash-GAT forward: Pallas runs
+    the fused forward, the backward is the panel softmax VJP of
+    :func:`_gat_panels_backward` over the same table."""
+    return _gat_ell_pallas_chunked(ell_idx, adst, ell_w, alpha_src, z,
+                                   negative_slope, interpret)
+
+
+def _gat_ell_diff_fwd(negative_slope, interpret, ell_idx, adst, ell_w,
+                      alpha_src, z):
+    out = _gat_ell_pallas_chunked(ell_idx, adst, ell_w, alpha_src, z,
+                                  negative_slope, interpret)
+    return out, (ell_idx, adst, ell_w, alpha_src, z)
+
+
+def _gat_ell_diff_bwd(negative_slope, interpret, residuals, dy):
+    ell_idx, adst, ell_w, alpha_src, z = residuals
+    d_adst, d_w, d_asrc, d_z = _gat_panels_backward(
+        ell_idx, adst, ell_w, alpha_src, z, dy, negative_slope)
+    d_idx = np.zeros(ell_idx.shape, jax.dtypes.float0)  # int operand: no ct
+    return d_idx, d_adst, d_w, d_asrc, d_z
+
+
+_gat_ell_pallas_diff.defvjp(_gat_ell_diff_fwd, _gat_ell_diff_bwd)
+
+
+def _bucket_adst(row_ids: jnp.ndarray, alpha_dst: jnp.ndarray,
+                 rows_pad: int) -> jnp.ndarray:
+    """Gather the receiver term per bucket row; padding rows get zeros
+    (their slots are all-invalid, so the value never contributes)."""
+    ids = jnp.asarray(row_ids)
+    adst = jnp.where((ids >= 0)[:, None],
+                     alpha_dst[jnp.maximum(ids, 0)], 0.0)
+    if rows_pad > adst.shape[0]:
+        adst = jnp.concatenate(
+            [adst, jnp.zeros((rows_pad - adst.shape[0], adst.shape[1]),
+                             adst.dtype)], axis=0)
+    return adst
+
+
+def gat_attend_ell(buckets: Sequence[EllBucket], alpha_src: jnp.ndarray,
+                   alpha_dst: jnp.ndarray, z: jnp.ndarray,
+                   edge_weight: Optional[jnp.ndarray] = None, *,
+                   num_rows: int, negative_slope: float = 0.2,
+                   force_pallas: Optional[bool] = None,
+                   interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Bucketed fused GAT aggregation: one kernel launch per bucket.
+
+    ``z`` is (N, H, F) per-head projected features, ``alpha_src`` /
+    ``alpha_dst`` the dense (N_src, H) / (N_dst, H) logit halves.
+    ``edge_weight`` (the folded explainer mask / per-edge weight) is per
+    edge in COO order — each bucket gathers its slots' weights through
+    ``ell_pos`` and applies them *after* the softmax (no renormalisation,
+    matching the materialised path). Differentiable end to end: the
+    per-bucket kernel carries a custom VJP and the gathers/scatters are
+    plain XLA ops, so gradients flow to ``alpha_src``, ``alpha_dst``,
+    ``z`` and ``edge_weight``. Rows absent from every bucket (degree 0)
+    keep the 0 fill; ``-1`` row ids (capacity padding) are masked out of
+    the scatter, so bucket arrays may be tracers (jit-argument batches).
+    Returns (num_rows, H, F).
+    """
+    take_pallas = use_pallas() if force_pallas is None else force_pallas
+    heads, feat = z.shape[1], z.shape[2]
+    out = jnp.zeros((num_rows, heads, feat), z.dtype)
+    for row_ids, ell_idx, ell_pos in buckets:
+        ell_idx = jnp.asarray(ell_idx)
+        adst = _bucket_adst(row_ids, alpha_dst, ell_idx.shape[0])
+        w_b = None
+        if edge_weight is not None:
+            pos = jnp.asarray(ell_pos)
+            w_b = jnp.where(pos >= 0,
+                            jnp.asarray(edge_weight)[jnp.maximum(pos, 0)],
+                            0.0).astype(jnp.float32)
+        if take_pallas:
+            itp = (jax.default_backend() != "tpu") if interpret is None \
+                else interpret
+            res = _gat_ell_pallas_diff(float(negative_slope), bool(itp),
+                                       ell_idx, adst, w_b, alpha_src, z)
+        else:
+            res = ref.gat_attend_panels(ell_idx, adst, w_b, alpha_src, z,
+                                        negative_slope=negative_slope)
+        ids = jnp.asarray(row_ids)
+        # Padding ids scatter out of bounds and are dropped.
+        ids = jnp.where(ids >= 0, ids, num_rows)
+        out = out.at[ids].set(res[: ids.shape[0]].astype(z.dtype),
+                              mode="drop")
+    return out
+
+
+def gat_alpha_ell(buckets: Sequence[EllBucket], alpha_src: jnp.ndarray,
+                  alpha_dst: jnp.ndarray, *, num_edges: int,
+                  negative_slope: float = 0.2) -> jnp.ndarray:
+    """Recover per-edge attention coefficients (E, H) from the ELL panels.
+
+    The panels' softmax probabilities are scattered back to COO edge order
+    through the COO-keyed ``ell_pos`` — the ``return_attention`` round trip.
+    Pure XLA (the (E, H) result is inherently edge-level); padding slots
+    scatter out of bounds and drop.
+    """
+    heads = alpha_src.shape[1]
+    alpha = jnp.zeros((num_edges, heads), jnp.float32)
+    for row_ids, ell_idx, ell_pos in buckets:
+        ell_idx = jnp.asarray(ell_idx)
+        adst = _bucket_adst(row_ids, alpha_dst, ell_idx.shape[0])
+        p = ref.gat_softmax_panels(ell_idx, adst, alpha_src,
+                                   negative_slope=negative_slope)
+        pos = jnp.asarray(ell_pos)
+        pos = jnp.where(pos >= 0, pos, num_edges).reshape(-1)
+        alpha = alpha.at[pos].set(
+            p.reshape(-1, heads).astype(jnp.float32), mode="drop")
+    return alpha

@@ -1,0 +1,86 @@
+"""Pure-jnp oracle for the fused GAT attention aggregation (panel layout).
+
+Same math as the Pallas kernel — leaky-relu logits, masked row softmax,
+weighted accumulate — over the ``(R, K)`` blocked-ELL panels, written as
+plain XLA ops. Used for validation, as the CPU/GPU dispatch target, and as
+the recompute inside the ops-level custom VJP.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.segment_softmax import ref as softmax_ref
+
+
+def gat_attend_coo(send: jnp.ndarray, recv: jnp.ndarray,
+                   a_send: jnp.ndarray, a_recv: jnp.ndarray,
+                   z_send: jnp.ndarray, *, num_rows: int,
+                   negative_slope: float = 0.2,
+                   edge_weight: Optional[jnp.ndarray] = None,
+                   message_callback: Optional[Callable] = None
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """COO-level attention aggregation oracle: ``(out, alpha)``.
+
+    The single source of truth for the edge-materialising fallback (both
+    ``EdgeIndex.attend`` and ``MessagePassing._propagate_attention`` call
+    it), so fused-vs-fallback numerics can never drift between entry
+    points. ``edge_weight`` multiplies messages *after* the softmax (no
+    renormalisation); ``message_callback`` observes the flattened
+    ``(E, H*F)`` messages (the explainer's c(.) hook).
+    """
+    logits = a_send[send] + a_recv[recv]                    # (E, H)
+    logits = jax.nn.leaky_relu(logits, negative_slope)
+    alpha = softmax_ref.segment_softmax(logits, recv, num_rows)
+    msg = z_send[send] * alpha[..., None]                   # (E, H, F)
+    if edge_weight is not None:
+        msg = msg * edge_weight[:, None, None].astype(msg.dtype)
+    if message_callback is not None:
+        msg = message_callback(msg.reshape(msg.shape[0], -1)).reshape(
+            msg.shape)
+    out = jax.ops.segment_sum(msg, recv, num_segments=num_rows)
+    return out, alpha
+
+
+def gat_softmax_panels(ell_idx: jnp.ndarray, adst: jnp.ndarray,
+                       alpha_src: jnp.ndarray, *,
+                       negative_slope: float = 0.2) -> jnp.ndarray:
+    """Per-slot attention probabilities ``p`` of shape (R, K, H).
+
+    ``ell_idx`` (R, K) neighbor table (-1 = padding), ``adst`` (R, H) the
+    receiver term per row, ``alpha_src`` (N, H) the sender term per node.
+    Padding slots get p = 0; all-padding rows a 0 row (the kernel's empty-
+    segment convention).
+    """
+    mask = ell_idx >= 0
+    safe = jnp.maximum(ell_idx, 0)
+    raw = alpha_src[safe] + adst[:, None, :]            # (R, K, H)
+    logits = jnp.where(raw >= 0, raw, negative_slope * raw)
+    neg = jnp.where(mask[..., None], logits, -jnp.inf)
+    mx = jnp.max(neg, axis=1, keepdims=True)
+    mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+    ex = jnp.where(mask[..., None], jnp.exp(logits - mx), 0.0)
+    den = jnp.maximum(ex.sum(axis=1, keepdims=True), 1e-16)
+    return ex / den
+
+
+def gat_attend_panels(ell_idx: jnp.ndarray, adst: jnp.ndarray,
+                      ell_w: Optional[jnp.ndarray], alpha_src: jnp.ndarray,
+                      z: jnp.ndarray, *,
+                      negative_slope: float = 0.2) -> jnp.ndarray:
+    """Oracle fused attention over one bucket: (R, H, F).
+
+    ``z`` is (N, H, F); ``ell_w`` optional (R, K) post-softmax per-slot
+    weights (the explainer mask / edge weight — applied to the numerator
+    only, no renormalisation, matching the materialised path).
+    """
+    p = gat_softmax_panels(ell_idx, adst, alpha_src,
+                           negative_slope=negative_slope)
+    if ell_w is not None:
+        p = p * ell_w[..., None]
+    zg = z[jnp.maximum(ell_idx, 0)]                     # (R, K, H, F)
+    return jnp.einsum("rkh,rkhf->rhf", p.astype(jnp.float32),
+                      zg.astype(jnp.float32)).astype(z.dtype)

@@ -77,10 +77,12 @@ def _flash_kernel(q_ref, k_ref, v_ref, out_ref, acc_ref, m_ref, l_ref, *,
 
 @functools.partial(jax.jit, static_argnames=(
     "causal", "block_q", "block_kv", "q_offset", "interpret"))
-def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
-                           causal: bool = True, block_q: int = DEFAULT_BQ,
-                           block_kv: int = DEFAULT_BKV, q_offset: int = 0,
-                           interpret: bool = False) -> jnp.ndarray:
+def _flash_attention_pallas_impl(q: jnp.ndarray, k: jnp.ndarray,
+                                 v: jnp.ndarray, *, causal: bool = True,
+                                 block_q: int = DEFAULT_BQ,
+                                 block_kv: int = DEFAULT_BKV,
+                                 q_offset: int = 0,
+                                 interpret: bool = False) -> jnp.ndarray:
     """q: (B, Sq, H, D), k/v: (B, Sk, H, D) (pre-broadcast GQA upstream).
 
     Sq % block_q == 0 and Sk % block_kv == 0 (pad upstream; padded KV masked
@@ -119,3 +121,34 @@ def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         interpret=interpret,
     )(qr, kr, vr)
     return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)
+
+
+from repro.kernels import forward_only_pallas
+
+_flash_attention_pallas_cv = forward_only_pallas(
+    lambda causal, block_q, block_kv, q_offset, interpret, q, k, v:
+        _flash_attention_pallas_impl(q, k, v, causal=causal,
+                                     block_q=block_q, block_kv=block_kv,
+                                     q_offset=q_offset, interpret=interpret),
+    num_static=5,
+    message=(
+        "flash_attention_pallas is the raw Pallas kernel and has no "
+        "backward rule. Differentiate through "
+        "repro.kernels.flash_attention.ops.attention with "
+        "REPRO_USE_PALLAS=0 (the chunked XLA path is differentiable); the "
+        "LM train path keeps XLA attention."))
+
+
+def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                           causal: bool = True, block_q: int = DEFAULT_BQ,
+                           block_kv: int = DEFAULT_BKV, q_offset: int = 0,
+                           interpret: bool = False) -> jnp.ndarray:
+    """FlashAttention Pallas kernel (see :func:`_flash_attention_pallas_impl`).
+
+    Forward-only: differentiating this raw entry point raises a clear
+    ``NotImplementedError`` naming the differentiable XLA path and the
+    ``REPRO_USE_PALLAS`` fallback env var, instead of an opaque
+    ``pallas_call`` trace error.
+    """
+    return _flash_attention_pallas_cv(causal, block_q, block_kv, q_offset,
+                                      interpret, q, k, v)

@@ -1,10 +1,20 @@
-"""Public segment-softmax entry point with kernel/oracle dispatch."""
+"""Public segment-softmax entry point with kernel/oracle dispatch.
+
+The padded-panel entry point is differentiable on the Pallas branch: an
+ops-level ``jax.custom_vjp`` runs the standard softmax backward
+``ds = p * (dy - sum_k p * dy)`` over the same panels in XLA (the PR-4
+pattern), so only the *raw* kernel entry point remains forward-only (it
+raises a clear error via the shared ``forward_only_pallas`` guard).
+"""
 
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import use_pallas
 from repro.kernels.segment_softmax import ref
@@ -17,11 +27,38 @@ def segment_softmax(values: jnp.ndarray, segment_ids: jnp.ndarray,
     return ref.segment_softmax(values, segment_ids, num_segments)
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _segment_softmax_ell_diff(interpret, values, mask):
+    return segment_softmax_pallas(values, mask, interpret=interpret)
+
+
+def _segment_softmax_ell_fwd(interpret, values, mask):
+    p = segment_softmax_pallas(values, mask, interpret=interpret)
+    return p, (p, mask)
+
+
+def _segment_softmax_ell_bwd(interpret, residuals, dy):
+    p, mask = residuals
+    ds = p * (dy - (p * dy).sum(axis=1, keepdims=True))
+    ds = jnp.where(mask != 0, ds, 0.0).astype(p.dtype)
+    d_mask = np.zeros(mask.shape, jax.dtypes.float0)  # int operand: no ct
+    return ds, d_mask
+
+
+_segment_softmax_ell_diff.defvjp(_segment_softmax_ell_fwd,
+                                 _segment_softmax_ell_bwd)
+
+
 def segment_softmax_ell(values: jnp.ndarray, mask: jnp.ndarray, *,
                         force_pallas: Optional[bool] = None,
                         interpret: bool = False) -> jnp.ndarray:
-    """Padded-panel segment softmax; Pallas on TPU, oracle elsewhere."""
+    """Padded-panel segment softmax; Pallas on TPU, oracle elsewhere.
+
+    Both branches differentiate: the Pallas branch carries the ops-level
+    custom VJP above, the oracle is plain XLA.
+    """
     take_pallas = use_pallas() if force_pallas is None else force_pallas
     if take_pallas:
-        return segment_softmax_pallas(values, mask, interpret=interpret)
+        return _segment_softmax_ell_diff(interpret, values,
+                                         mask.astype(jnp.int32))
     return ref.segment_softmax_ell(values, mask)

@@ -32,14 +32,26 @@ def _segment_softmax_kernel(val_ref, mask_ref, out_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def segment_softmax_pallas(values: jnp.ndarray, mask: jnp.ndarray, *,
-                           block_rows: int = DEFAULT_BR,
-                           interpret: bool = False) -> jnp.ndarray:
-    """Masked row softmax over (R, K) panels. R % block_rows == 0."""
+def _segment_softmax_pallas_impl(values: jnp.ndarray, mask: jnp.ndarray, *,
+                                 block_rows: int = DEFAULT_BR,
+                                 interpret: bool = False) -> jnp.ndarray:
+    """Masked row softmax over (R, K) panels.
+
+    Odd panel heights are padded (masked) up to the ``block_rows`` multiple
+    — the same capacity-padding convention as the SpMM kernel — instead of
+    asserting; padded rows are all-masked and come out as 0 rows, and the
+    result is sliced back to the caller's R.
+    """
     rows, k = values.shape
-    assert rows % block_rows == 0, (rows, block_rows)
-    grid = (rows // block_rows,)
-    return pl.pallas_call(
+    pad = -rows % block_rows
+    mask = mask.astype(jnp.int32)
+    if pad:
+        values = jnp.concatenate(
+            [values, jnp.zeros((pad, k), values.dtype)], axis=0)
+        mask = jnp.concatenate([mask, jnp.zeros((pad, k), mask.dtype)],
+                               axis=0)
+    grid = ((rows + pad) // block_rows,)
+    out = pl.pallas_call(
         _segment_softmax_kernel,
         grid=grid,
         in_specs=[
@@ -47,6 +59,36 @@ def segment_softmax_pallas(values: jnp.ndarray, mask: jnp.ndarray, *,
             pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((block_rows, k), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((rows, k), values.dtype),
+        out_shape=jax.ShapeDtypeStruct((rows + pad, k), values.dtype),
         interpret=interpret,
-    )(values, mask.astype(jnp.int32))
+    )(values, mask)
+    return out[:rows] if pad else out
+
+
+from repro.kernels import forward_only_pallas
+
+_segment_softmax_pallas_cv = forward_only_pallas(
+    lambda block_rows, interpret, values, mask:
+        _segment_softmax_pallas_impl(values, mask, block_rows=block_rows,
+                                     interpret=interpret),
+    num_static=2,
+    message=(
+        "segment_softmax_pallas is the raw Pallas kernel and has no "
+        "backward rule. Differentiate through the ops-level entry points "
+        "instead (repro.kernels.segment_softmax.ops.segment_softmax_ell "
+        "carries a custom VJP over the same panels, and the fused GAT path "
+        "repro.kernels.attention.ops.gat_attend_ell differentiates end to "
+        "end), or set REPRO_USE_PALLAS=0 to dispatch the differentiable "
+        "XLA oracle."))
+
+
+def segment_softmax_pallas(values: jnp.ndarray, mask: jnp.ndarray, *,
+                           block_rows: int = DEFAULT_BR,
+                           interpret: bool = False) -> jnp.ndarray:
+    """Masked row softmax over (R, K) panels (rows padded to the block).
+
+    Forward-only: differentiating this raw entry point raises a clear
+    ``NotImplementedError`` pointing at the ops-level wrappers (which carry
+    the custom VJP) and the ``REPRO_USE_PALLAS`` fallback env var.
+    """
+    return _segment_softmax_pallas_cv(block_rows, interpret, values, mask)

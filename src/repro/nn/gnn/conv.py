@@ -2,12 +2,14 @@
 (GCN, GraphSAGE, GIN, GAT, EdgeCNN) built on the MessagePassing framework.
 
 GCN/SAGE/GIN use the *fused* SpMM path (default message + sum/mean/max/min
-— all four reduce modes now lower to the blocked-ELL Pallas kernel on TPU);
-GAT and EdgeCNN exercise the edge-level materialisation path (custom
-messages, segment softmax) — together they cover both compute paths of C2.
-GCNConv wraps a raw ``(2, E)`` edge array into an ``EdgeIndex`` once so the
-fused path (and its demand-filled CSC/ELL caches) is reachable even when
-callers don't construct one themselves.
+— all four reduce modes lower to the blocked-ELL Pallas kernel on TPU);
+GAT rides the *fused attention* path (``EdgeIndex.attend`` — the flash-GAT
+Pallas kernel over the same ELL buckets, segment-softmax oracle fallback);
+EdgeCNN exercises the edge-level materialisation path (custom messages) —
+together they cover all three compute paths of C2. GCNConv wraps a raw
+``(2, E)`` edge array into an ``EdgeIndex`` once so the fused path (and its
+demand-filled CSC/ELL caches) is reachable even when callers don't
+construct one themselves.
 """
 
 from __future__ import annotations
@@ -19,7 +21,6 @@ import jax.numpy as jnp
 
 from repro.core.edge_index import EdgeIndex
 from repro.core.message_passing import MessagePassing
-from repro.kernels.segment_softmax import ops as softmax_ops
 from repro.nn.layers import MLP, Linear
 from repro.nn.module import glorot_uniform
 
@@ -125,11 +126,24 @@ class GINConv(MessagePassing):
 
 
 class GATConv(MessagePassing):
-    """Graph attention (GAT): exercises segment softmax + materialised path."""
+    """Graph attention (GAT) on the fused attention fast path.
+
+    The aggregation rides :meth:`MessagePassing._propagate_attention`:
+    with an ``EdgeIndex`` (and no explainer ``message_callback``) the step
+    lowers to ``EdgeIndex.attend`` — the fused flash-GAT Pallas kernel over
+    the blocked-ELL buckets when a cache is packed (loader-prefilled
+    batches / ``fill_cache()``), the COO segment-softmax oracle otherwise.
+    Explainer soft masks fold into the post-softmax per-edge weight and
+    stay fused. Bipartite ``(x_src, x_dst)`` inputs (the hetero per-relation
+    call) share one projection; ``flow="target_to_source"`` dispatches the
+    transpose table with sender/receiver roles (and attention vectors)
+    swapped.
+    """
 
     def __init__(self, in_features: int, out_features: int, heads: int = 1,
-                 negative_slope: float = 0.2, concat: bool = True):
-        super().__init__(aggr="sum")
+                 negative_slope: float = 0.2, concat: bool = True,
+                 flow: str = "source_to_target"):
+        super().__init__(aggr="sum", flow=flow)
         self.heads = heads
         self.out_per_head = out_features // heads if concat else out_features
         self.concat = concat
@@ -148,26 +162,29 @@ class GATConv(MessagePassing):
 
     def apply(self, params, x, edge_index, num_nodes: Optional[int] = None,
               message_callback=None, return_attention: bool = False,
-              edge_mask: Optional[jnp.ndarray] = None, **kw):
-        n = num_nodes if num_nodes is not None else x.shape[0]
+              edge_mask: Optional[jnp.ndarray] = None,
+              edge_weight: Optional[jnp.ndarray] = None, **kw):
         h, f = self.heads, self.out_per_head
-        z = self.lin.apply(params["lin"], x).reshape(-1, h, f)
-        if isinstance(edge_index, EdgeIndex):
-            src, dst = edge_index.src, edge_index.dst
+        x_src, x_dst = x if isinstance(x, tuple) else (x, x)
+        z_src = self.lin.apply(params["lin"], x_src).reshape(-1, h, f)
+        z_dst = (z_src if x_dst is x_src
+                 else self.lin.apply(params["lin"], x_dst).reshape(-1, h, f))
+        # att_src weighs the *message sender*, att_dst the receiver — under
+        # target_to_source flow the dst side sends, so the vectors swap.
+        if self.flow == "source_to_target":
+            a_src = (z_src * params["att_src"]).sum(-1)  # (N_src, H)
+            a_dst = (z_dst * params["att_dst"]).sum(-1)  # (N_dst, H)
         else:
-            src, dst = edge_index[0], edge_index[1]
-        alpha_src = (z * params["att_src"]).sum(-1)  # (N, H)
-        alpha_dst = (z * params["att_dst"]).sum(-1)
-        logits = alpha_src[src] + alpha_dst[dst]  # (E, H)
-        logits = jax.nn.leaky_relu(logits, self.negative_slope)
-        alpha = softmax_ops.segment_softmax(logits, dst, n)  # (E, H)
-        msg = z[src] * alpha[..., None]  # (E, H, F)
-        if edge_mask is not None:  # explainer soft mask (GAT materialises
-            msg = msg * edge_mask[:, None, None].astype(msg.dtype)  # anyway)
-        if message_callback is not None:  # explainer hook on edge messages
-            msg = message_callback(msg.reshape(msg.shape[0], -1)).reshape(
-                msg.shape)
-        out = jax.ops.segment_sum(msg, dst, num_segments=n)  # (N, H, F)
+            a_src = (z_src * params["att_dst"]).sum(-1)
+            a_dst = (z_dst * params["att_src"]).sum(-1)
+        res = self.propagate(params, edge_index, (z_src, z_dst),
+                             alpha=(a_src, a_dst), edge_mask=edge_mask,
+                             edge_weight=edge_weight, num_nodes=num_nodes,
+                             message_callback=message_callback,
+                             negative_slope=self.negative_slope,
+                             return_attention=return_attention)
+        out, alpha = res if return_attention else (res, None)
+        n = out.shape[0]
         out = out.reshape(n, h * f) if self.concat else out.mean(1)
         out = out + params["bias"]
         if return_attention:

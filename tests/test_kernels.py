@@ -4,6 +4,8 @@ All kernels execute in interpret mode on this CPU container (the kernel
 body runs in Python) — the same code lowers to Mosaic on a real TPU.
 """
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -197,6 +199,85 @@ def test_raw_gmm_kernel_grad_raises_actionable(rng):
             x_, w, tile_group, interpret=True).sum())(x)
 
 
+# ----------------------------------------------------------- fused attention
+@pytest.mark.parametrize("shape", [(8, 3, 16, 2, 8), (16, 7, 50, 1, 128),
+                                   (24, 5, 30, 4, 16)])
+def test_gat_ell_kernel_sweep(rng, shape):
+    """Fused flash-GAT kernel == panel oracle across (R, K, N, H, F)."""
+    from repro.kernels.attention import ref as gat_ref
+    from repro.kernels.attention.gat_attention import gat_ell_pallas
+    rows, k, n, h, f = shape
+    ell = rng.integers(-1, n, (rows, k)).astype(np.int32)
+    ell[3] = -1  # an all-padding row must come out as a 0 row
+    adst = jnp.asarray(rng.standard_normal((rows, h)).astype(np.float32))
+    asrc = jnp.asarray(rng.standard_normal((n, h)).astype(np.float32))
+    z = jnp.asarray(rng.standard_normal((n, h, f)).astype(np.float32))
+    w = jnp.asarray(rng.random((rows, k)).astype(np.float32))
+    for w_ in (None, w):
+        a = gat_ref.gat_attend_panels(jnp.asarray(ell), adst, w_, asrc, z)
+        b = gat_ell_pallas(jnp.asarray(ell), adst, w_, asrc,
+                           z.reshape(n, h * f), interpret=True)
+        np.testing.assert_allclose(np.asarray(a).reshape(rows, h * f),
+                                   np.asarray(b), rtol=1e-5, atol=1e-5)
+        assert np.abs(np.asarray(b)[3]).max() == 0.0
+
+
+def test_gat_ell_grad_matches_oracle(rng):
+    """The ops-level custom VJP: kernel-path gradients (alphas, weights AND
+    features) == panel-oracle gradients."""
+    from repro.kernels.attention import ops as attn_ops, ref as gat_ref
+    rows, k, n, h, f = 16, 5, 23, 2, 16
+    ell = jnp.asarray(rng.integers(-1, n, (rows, k)).astype(np.int32))
+    adst = jnp.asarray(rng.standard_normal((rows, h)).astype(np.float32))
+    asrc = jnp.asarray(rng.standard_normal((n, h)).astype(np.float32))
+    z = jnp.asarray(rng.standard_normal((n, h, f)).astype(np.float32))
+    w = jnp.asarray(rng.random((rows, k)).astype(np.float32))
+
+    def loss(fn, adst_, w_, asrc_, z_):
+        out = fn(adst_, w_, asrc_, z_)
+        return (out * jnp.sin(jnp.arange(out.size).reshape(out.shape))).sum()
+
+    kernel = lambda a_, w_, s_, z_: attn_ops._gat_ell_pallas_diff(
+        0.2, True, ell, a_, w_, s_, z_)
+    oracle = lambda a_, w_, s_, z_: gat_ref.gat_attend_panels(
+        ell, a_, w_, s_, z_, negative_slope=0.2)
+    gk = jax.grad(functools.partial(loss, kernel),
+                  argnums=(0, 1, 2, 3))(adst, w, asrc, z)
+    go = jax.grad(functools.partial(loss, oracle),
+                  argnums=(0, 1, 2, 3))(adst, w, asrc, z)
+    for a, b in zip(gk, go):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4,
+                                   atol=1e-4)
+
+
+def test_gat_ell_grad_row_chunked(rng, monkeypatch):
+    """The VJP covers the multi-launch (SMEM row-chunked) forward too."""
+    from repro.kernels.attention import ops as attn_ops, ref as gat_ref
+    monkeypatch.setattr(attn_ops, "MAX_PREFETCH_ELEMS", 64)
+    rows, k, n, h, f = 40, 5, 23, 2, 16
+    ell = jnp.asarray(rng.integers(-1, n, (rows, k)).astype(np.int32))
+    adst = jnp.asarray(rng.standard_normal((rows, h)).astype(np.float32))
+    asrc = jnp.asarray(rng.standard_normal((n, h)).astype(np.float32))
+    z = jnp.asarray(rng.standard_normal((n, h, f)).astype(np.float32))
+    gk = jax.grad(lambda z_: attn_ops._gat_ell_pallas_diff(
+        0.2, True, ell, adst, None, asrc, z_).sum())(z)
+    go = jax.grad(lambda z_: gat_ref.gat_attend_panels(
+        ell, adst, None, asrc, z_).sum())(z)
+    np.testing.assert_allclose(np.asarray(gk), np.asarray(go), rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_raw_gat_kernel_grad_raises_actionable(rng):
+    from repro.kernels.attention.gat_attention import gat_ell_pallas
+    ell = jnp.asarray(rng.integers(-1, 10, (8, 4)).astype(np.int32))
+    adst = jnp.asarray(rng.standard_normal((8, 2)).astype(np.float32))
+    asrc = jnp.asarray(rng.standard_normal((10, 2)).astype(np.float32))
+    z2d = jnp.asarray(rng.standard_normal((10, 16)).astype(np.float32))
+    with pytest.raises(NotImplementedError, match="REPRO_USE_PALLAS"):
+        jax.grad(lambda z_: gat_ell_pallas(ell, adst, None, asrc, z_,
+                                           interpret=True).sum())(z2d)
+
+
 # ----------------------------------------------------------- segment softmax
 @settings(max_examples=10, deadline=None)
 @given(st.integers(0, 2 ** 31 - 1))
@@ -217,6 +298,40 @@ def test_segment_softmax_property(seed):
     assert (np.abs(out[~mask]) < 1e-7).all()
 
 
+def test_segment_softmax_pads_odd_panel_heights(rng):
+    """Regression: R % block_rows != 0 used to hard-assert; now the panel
+    is capacity-padded (masked) to the block multiple and sliced back."""
+    vals = jnp.asarray(rng.standard_normal((10, 16)).astype(np.float32))
+    mask = jnp.asarray(rng.random((10, 16)) < 0.7)
+    out = segment_softmax_pallas(vals, mask, interpret=True)
+    ref = ss_ref.segment_softmax_ell(vals, mask)
+    assert out.shape == (10, 16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_segment_softmax_ell_ops_grad_matches_oracle(rng):
+    """The ops-level padded-panel entry differentiates on the Pallas branch
+    (custom VJP over the same panels) and matches the oracle gradient."""
+    from repro.kernels.segment_softmax import ops as ss_ops
+    vals = jnp.asarray(rng.standard_normal((12, 8)).astype(np.float32))
+    mask = jnp.asarray(rng.random((12, 8)) < 0.7)
+    gk = jax.grad(lambda v: (ss_ops.segment_softmax_ell(
+        v, mask, force_pallas=True, interpret=True) ** 2).sum())(vals)
+    go = jax.grad(lambda v: (ss_ref.segment_softmax_ell(
+        v, mask) ** 2).sum())(vals)
+    np.testing.assert_allclose(np.asarray(gk), np.asarray(go), rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_raw_segment_softmax_grad_raises_actionable(rng):
+    vals = jnp.asarray(rng.standard_normal((8, 8)).astype(np.float32))
+    mask = jnp.ones((8, 8), bool)
+    with pytest.raises(NotImplementedError, match="REPRO_USE_PALLAS"):
+        jax.grad(lambda v: segment_softmax_pallas(
+            v, mask, interpret=True).sum())(vals)
+
+
 # ----------------------------------------------------------- flash attention
 @pytest.mark.parametrize("b,s,h,d,causal", [
     (1, 128, 2, 64, True), (2, 256, 4, 64, True), (2, 128, 2, 128, False),
@@ -232,6 +347,13 @@ def test_flash_attention_sweep(rng, b, s, h, d, causal):
                                  block_q=128, block_kv=128, interpret=True)
     np.testing.assert_allclose(np.asarray(a), np.asarray(out), rtol=2e-4,
                                atol=2e-4)
+
+
+def test_raw_flash_attention_grad_raises_actionable(rng):
+    q = jnp.asarray(rng.standard_normal((1, 128, 2, 16)).astype(np.float32))
+    with pytest.raises(NotImplementedError, match="REPRO_USE_PALLAS"):
+        jax.grad(lambda q_: flash_attention_pallas(
+            q_, q, q, causal=True, interpret=True).sum())(q)
 
 
 def test_flash_attention_bf16(rng):
