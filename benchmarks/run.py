@@ -13,9 +13,9 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (explainer_fidelity, grouped_matmul_bench,
-                            sampler_throughput, spmm_bench, store_scaling,
-                            table12_compile_trim)
+    from benchmarks import (chaos_recovery, explainer_fidelity,
+                            grouped_matmul_bench, sampler_throughput,
+                            spmm_bench, store_scaling, table12_compile_trim)
 
     suites = [
         ("table12_compile_trim", table12_compile_trim.run),
@@ -28,6 +28,7 @@ def main() -> None:
         ("spmm_hetero_step", spmm_bench.run_hetero_step),
         ("spmm_gat_step", spmm_bench.run_gat_step),
         ("explainer_fidelity", explainer_fidelity.run),
+        ("chaos_recovery", chaos_recovery.run),
     ]
     failed = []
     for name, fn in suites:

@@ -11,7 +11,15 @@ Implementations here:
     routing table; ``get`` fans indices out per partition and re-assembles
     (the JAX-land stand-in for WholeGraph/remote KV stores). Fetch counters
     expose the remote-traffic behaviour that the paper's distributed
-    benchmarks measure.
+    benchmarks measure (``stats`` is lock-guarded: the resilient fan-out
+    issues concurrent per-partition gets from a thread pool).
+
+Fault tolerance lives one layer up, in ``repro.data.resilience``:
+``ResilientFeatureStore`` decorates any backend here with bounded retries,
+per-fetch deadlines, per-partition circuit breakers, and a last-known-good
+row cache that serves stale features (recorded in its ``health`` counters
+and the batch's ``extras['degraded']`` mask) when a partition is down;
+``ChaosFeatureStore`` injects deterministic faults for tests/benchmarks.
 """
 
 from __future__ import annotations
@@ -49,21 +57,20 @@ class FeatureStore(abc.ABC):
 
     def get_padded(self, index: np.ndarray, *, group: str = "node",
                    attr: str = "x", fill: float = 0.0) -> np.ndarray:
-        """Gather with -1 = padding -> zero rows (the loader's fetch op).
+        """Gather with -1 = padding -> fill rows (the loader's fetch op).
 
-        Only valid rows are fetched from the backend (pads never generate
-        storage traffic — keeps remote-fetch accounting honest).
+        Exactly ONE backend fetch: the valid rows are fetched once and
+        dtype/feature shape derive from that same result (an all-pad index
+        issues an *empty* fetch, which also works on an empty store) — pads
+        never generate storage traffic and the fetch isn't double-counted
+        in backend stats.
         """
         index = np.asarray(index)
         valid = index >= 0
-        probe = self.get_tensor(group=group, attr=attr,
-                                index=index[valid][:1]) if valid.any() else \
-            self.get_tensor(group=group, attr=attr, index=np.zeros(1, int))
-        out = np.full((len(index),) + probe.shape[1:], fill,
-                      dtype=probe.dtype)
-        if valid.any():
-            out[valid] = self.get_tensor(group=group, attr=attr,
-                                         index=index[valid])
+        rows = self.get_tensor(group=group, attr=attr,
+                               index=index[valid].astype(np.int64))
+        out = np.full((len(index),) + rows.shape[1:], fill, dtype=rows.dtype)
+        out[valid] = rows
         return out
 
 
@@ -119,6 +126,18 @@ class PartitionedFeatureStore(FeatureStore):
         self._route[key] = np.asarray(route)
         self._local_idx[key] = local_idx
 
+    def _feat_meta(self, key) -> Tuple[tuple, np.dtype]:
+        """(feature shape, dtype) from any non-empty partition.
+
+        Partition 0 may be empty (``num_parts > num_rows`` or a skewed
+        custom route); any partition slice carries the trailing shape, but
+        prefer a populated one so subclasses with lazily-materialised parts
+        stay correct.
+        """
+        parts = self._parts[key]
+        ref = next((p for p in parts if len(p)), parts[0])
+        return tuple(ref.shape[1:]), ref.dtype
+
     def _get(self, key, index):
         route = self._route[key]
         if index is None:
@@ -126,9 +145,8 @@ class PartitionedFeatureStore(FeatureStore):
         index = np.asarray(index)
         local = self._local_idx[key][index]
         part = route[index]
-        feat_dim = self._parts[key][0].shape[1:]
-        out = np.zeros((len(index),) + feat_dim,
-                       dtype=self._parts[key][0].dtype)
+        feat_dim, dtype = self._feat_meta(key)
+        out = np.zeros((len(index),) + feat_dim, dtype=dtype)
         with self._lock:
             self.stats["requests"] += 1
             for p in range(self.num_parts):
@@ -145,4 +163,4 @@ class PartitionedFeatureStore(FeatureStore):
 
     def _size(self, key):
         n = len(self._route[key])
-        return (n,) + tuple(self._parts[key][0].shape[1:])
+        return (n,) + self._feat_meta(key)[0]

@@ -77,7 +77,11 @@ class GraphStore(abc.ABC):
                        num_nodes: Optional[int] = None,
                        time: Optional[np.ndarray] = None):
         src, dst = np.asarray(edge_index[0]), np.asarray(edge_index[1])
-        n = num_nodes or (int(max(src.max(), dst.max())) + 1 if len(src) else 0)
+        if num_nodes is None:
+            # infer from the edges; an explicit num_nodes=0 (empty graph)
+            # must NOT fall through to src.max() on empty arrays
+            num_nodes = int(max(src.max(), dst.max())) + 1 if len(src) else 0
+        n = num_nodes
         self._put(edge_type,
                   (src, dst, None if time is None else np.asarray(time), n))
         return self

@@ -363,8 +363,11 @@ class HeteroNeighborLoader(_PrefetchLoader):
                  temporal_strategy: str = "uniform",
                  transform=None, shuffle: bool = False,
                  drop_last: bool = True, prefetch: int = 0,
-                 prefill_ell: Optional[bool] = None, seed: int = 0):
+                 prefill_ell: Optional[bool] = None,
+                 on_batch_error: str = "raise", batch_retries: int = 2,
+                 seed: int = 0):
         self.fs = feature_store
+        self._init_policy(on_batch_error, batch_retries)
         self.sampler = HeteroNeighborSampler(
             graph_store, num_neighbors,
             temporal_strategy=temporal_strategy, seed=seed)
@@ -396,8 +399,17 @@ class HeteroNeighborLoader(_PrefetchLoader):
         fill_ell = (use_pallas() if self.prefill_ell is None
                     else self.prefill_ell)
         layouts = self._ell_layouts_for(len(seeds)) if fill_ell else {}
-        x_dict = {t: jnp.asarray(self.fs.get_padded(n, group=t, attr="x"))
-                  for t, n in out.node.items()}
+        fetch = getattr(self.fs, "get_padded_resilient", None)
+        degraded = None
+        if fetch is not None:  # resilient store: per-type degraded masks
+            fetched = {t: fetch(n, group=t, attr="x")
+                       for t, n in out.node.items()}
+            x_dict = {t: jnp.asarray(v[0]) for t, v in fetched.items()}
+            degraded = {t: jnp.asarray(v[1]) for t, v in fetched.items()}
+        else:
+            x_dict = {t: jnp.asarray(self.fs.get_padded(n, group=t,
+                                                        attr="x"))
+                      for t, n in out.node.items()}
         ei_dict = {}
         for et in self.sampler.edge_types:
             ei_dict[et] = EdgeIndex.from_coo_prefilled(
@@ -420,6 +432,8 @@ class HeteroNeighborLoader(_PrefetchLoader):
             seed_type=out.seed_type,
             num_sampled_nodes_dict=out.num_sampled_nodes,
             num_sampled_edges_dict=out.num_sampled_edges, y=y)
+        if degraded is not None:
+            batch.extras["degraded"] = degraded
         if self.transform is not None:
             batch = self.transform(batch)
         return batch

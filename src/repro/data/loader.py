@@ -12,6 +12,15 @@ passed as jit arguments take the Pallas SpMM path with a single compilation
 across batches. ``Batch`` is a registered pytree for exactly this reason.
 Supports externally-seeded iteration (training tables with per-seed
 timestamps + attached labels, the RDL workflow of §3.1) via ``transform``.
+
+Fault tolerance: when the feature store is a
+``repro.data.resilience.ResilientFeatureStore`` the producer's gathers fan
+out per partition on its thread pool (retries + deadlines + circuit
+breakers behind the scenes) and each batch carries an
+``extras['degraded']`` row mask for features served from the stale cache;
+``on_batch_error="raise"|"retry"|"skip"`` decides what a batch-level store
+failure does, with every retry/skip/degraded row counted in the loader's
+``health`` dict. See the ROADMAP "Store failure handling" subsection.
 """
 
 from __future__ import annotations
@@ -28,6 +37,7 @@ import numpy as np
 from repro.core.edge_index import EdgeIndex
 from repro.data.feature_store import FeatureStore
 from repro.data.graph_store import DEFAULT_ETYPE, GraphStore
+from repro.data.resilience import StoreError
 from repro.data.sampler import NeighborSampler, SamplerOutput
 from repro.kernels import use_pallas
 from repro.kernels.spmm.ops import ell_layout_from_bounds
@@ -76,6 +86,11 @@ def _batch_unflatten(aux, children):
 jax.tree_util.register_pytree_node(Batch, _batch_flatten, _batch_unflatten)
 
 
+_SKIP = object()  # sentinel: a batch dropped by on_batch_error="skip"
+
+_BATCH_ERROR_MODES = ("raise", "retry", "skip")
+
+
 class _PrefetchLoader:
     """Seed-batching + producer-thread prefetch shared by both loaders.
 
@@ -85,6 +100,16 @@ class _PrefetchLoader:
     double-buffered producer thread, exception propagation through the
     queue, and reaping an abandoned producer) lives here once — the
     homogeneous and heterogeneous loaders differ only in what a batch *is*.
+
+    Store failures (``repro.data.resilience.StoreError``) are policy, not
+    fate: ``on_batch_error`` picks what a failed ``_make_batch`` does —
+    ``"raise"`` propagates immediately, ``"retry"`` re-samples/re-fetches
+    the same seeds up to ``batch_retries`` times then raises, ``"skip"``
+    retries then drops the batch and keeps the epoch going. Every decision
+    lands in the ``health`` counter dict ({batches, batch_retries,
+    skipped_batches, degraded_rows}); degraded rows are read off the
+    batch's ``extras['degraded']`` mask (filled by the resilient feature
+    store). Non-store exceptions always propagate — a bug is not a fault.
     """
 
     input_nodes: np.ndarray
@@ -94,10 +119,60 @@ class _PrefetchLoader:
     drop_last: bool
     prefetch: int
     rng: np.random.Generator
+    on_batch_error: str = "raise"
+    batch_retries: int = 2
 
     def _make_batch(self, seeds: np.ndarray,
                     seed_time: Optional[np.ndarray]):
         raise NotImplementedError
+
+    def _init_policy(self, on_batch_error: str, batch_retries: int):
+        if on_batch_error not in _BATCH_ERROR_MODES:
+            raise ValueError(f"on_batch_error must be one of "
+                             f"{_BATCH_ERROR_MODES}, got {on_batch_error!r}")
+        self.on_batch_error = on_batch_error
+        self.batch_retries = int(batch_retries)
+        self.health = {"batches": 0, "batch_retries": 0,
+                       "skipped_batches": 0, "degraded_rows": 0}
+
+    @staticmethod
+    def _degraded_count(batch) -> int:
+        extras = getattr(batch, "extras", None)
+        if not extras or "degraded" not in extras:
+            return 0
+        d = extras["degraded"]
+        leaves = d.values() if isinstance(d, dict) else [d]
+        return int(sum(int(np.asarray(m).sum()) for m in leaves))
+
+    def _make_batch_guarded(self, seeds, seed_time, abort=None):
+        """Apply ``on_batch_error`` around ``_make_batch``.
+
+        Returns the batch, or ``_SKIP`` when the policy drops it. ``abort``
+        (the producer's abandonment flag) bounds how long a retry loop can
+        hold the producer thread after the consumer is gone.
+        """
+        if not hasattr(self, "health"):
+            self._init_policy(self.on_batch_error, self.batch_retries)
+        attempts = (1 if self.on_batch_error == "raise"
+                    else 1 + self.batch_retries)
+        last = None
+        for attempt in range(attempts):
+            if abort is not None and abort() and attempt > 0:
+                break
+            try:
+                batch = self._make_batch(seeds, seed_time)
+            except StoreError as exc:
+                last = exc
+                if attempt + 1 < attempts:
+                    self.health["batch_retries"] += 1
+                continue
+            self.health["batches"] += 1
+            self.health["degraded_rows"] += self._degraded_count(batch)
+            return batch
+        if self.on_batch_error == "skip":
+            self.health["skipped_batches"] += 1
+            return _SKIP
+        raise last
 
     def _seed_batches(self):
         order = np.arange(len(self.input_nodes))
@@ -114,7 +189,9 @@ class _PrefetchLoader:
     def __iter__(self):
         if self.prefetch <= 0:
             for seeds, t in self._seed_batches():
-                yield self._make_batch(seeds, t)
+                batch = self._make_batch_guarded(seeds, t)
+                if batch is not _SKIP:
+                    yield batch
             return
         # double-buffered host prefetch (the paper's multi-worker loading,
         # adapted: vectorised sampling + a producer thread)
@@ -129,7 +206,10 @@ class _PrefetchLoader:
                 for seeds, t in self._seed_batches():
                     if abandoned.is_set():
                         return
-                    q.put(self._make_batch(seeds, t))
+                    batch = self._make_batch_guarded(
+                        seeds, t, abort=abandoned.is_set)
+                    if batch is not _SKIP:
+                        q.put(batch)
             except BaseException as exc:  # noqa: BLE001 - re-raised below
                 q.put(exc)
                 return
@@ -173,8 +253,10 @@ class NeighborLoader(_PrefetchLoader):
                  transform: Optional[Callable[[Batch], Batch]] = None,
                  shuffle: bool = False, drop_last: bool = True,
                  prefetch: int = 0, prefill_ell: Optional[bool] = None,
+                 on_batch_error: str = "raise", batch_retries: int = 2,
                  seed: int = 0):
         self.fs = feature_store
+        self._init_policy(on_batch_error, batch_retries)
         self.sampler = NeighborSampler(
             graph_store, num_neighbors, edge_type=edge_type,
             disjoint=disjoint, temporal_strategy=temporal_strategy, seed=seed)
@@ -206,7 +288,12 @@ class NeighborLoader(_PrefetchLoader):
     def _make_batch(self, seeds: np.ndarray,
                     seed_time: Optional[np.ndarray]) -> Batch:
         out: SamplerOutput = self.sampler.sample(seeds, seed_time)
-        x = self.fs.get_padded(out.node, group="node", attr="x")
+        fetch = getattr(self.fs, "get_padded_resilient", None)
+        degraded = None
+        if fetch is not None:  # resilient store: degraded-row mask surfaced
+            x, degraded = fetch(out.node, group="node", attr="x")
+        else:
+            x = self.fs.get_padded(out.node, group="node", attr="x")
         y = None
         if self.labels_attr is not None:
             try:
@@ -227,6 +314,8 @@ class NeighborLoader(_PrefetchLoader):
             num_sampled_nodes=out.num_sampled_nodes,
             num_sampled_edges=out.num_sampled_edges,
             y=y, edge_mask=jnp.asarray((out.edge >= 0)))
+        if degraded is not None:
+            batch.extras["degraded"] = jnp.asarray(degraded)
         if self.transform is not None:
             batch = self.transform(batch)
         return batch

@@ -1,0 +1,720 @@
+"""Fault tolerance for store-backed loading (the robustness spine).
+
+Remote ``FeatureStore``/``GraphStore`` backends fail, stall, and black out;
+the loading pipeline must ride through instead of killing the producer
+thread. This module is the whole story in one place:
+
+  * a structured error taxonomy — ``StoreError`` (base), retryable
+    ``TransientStoreError``, ``PartitionUnavailableError`` (carries the
+    partition id), ``FetchTimeoutError`` (deadline exceeded);
+  * ``RetryPolicy`` — bounded attempts, exponential backoff with *seeded*
+    deterministic jitter, retryable-class filtering, injectable sleep/abort
+    hooks so tests never assert on wall time;
+  * ``CircuitBreaker`` — per-partition closed -> open (after N consecutive
+    failures) -> half-open probe -> closed, with an injectable clock;
+  * ``ResilientFeatureStore`` / ``ResilientGraphStore`` — decorate any
+    backend with retry + deadline + breaker, per-partition fan-out on a
+    small thread pool (one slow partition overlaps the others), and
+    graceful degradation: a bounded last-known-good row cache serves stale
+    features for rows homed on a tripped partition instead of crashing the
+    step (health counters record every degraded row);
+  * ``ChaosFeatureStore`` / ``ChaosGraphStore`` + ``FailureSchedule`` —
+    deterministic fault injection (error rate, latency spikes, per-partition
+    blackout windows in call counts) from seeded per-partition rng streams,
+    so every retry/breaker/degradation path is exercised reproducibly.
+
+Fetch dispatch: fetch -> retry (transient) -> breaker (consecutive
+failures) -> stale-cache degrade (rows homed on the tripped partition) ->
+loader-level skip/raise (``_PrefetchLoader.on_batch_error``). See
+ROADMAP.md "Store failure handling".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import TimeoutError as _FutureTimeout
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.data.feature_store import FeatureStore, Key
+from repro.data.graph_store import EdgeType, GraphStore
+
+
+# --------------------------------------------------------------------------
+# Error taxonomy
+# --------------------------------------------------------------------------
+
+class StoreError(RuntimeError):
+    """Base class of storage-layer failures (the loader's policy boundary)."""
+
+
+class TransientStoreError(StoreError):
+    """A failure worth retrying (flaky RPC, lost packet, overloaded shard)."""
+
+
+class PartitionUnavailableError(TransientStoreError):
+    """A whole partition is unreachable (blackout / shard restart)."""
+
+    def __init__(self, partition: int, msg: str = ""):
+        super().__init__(msg or f"partition {partition} unavailable")
+        self.partition = partition
+
+
+class FetchTimeoutError(TransientStoreError):
+    """A fetch exceeded its deadline."""
+
+    def __init__(self, deadline_s: float, msg: str = ""):
+        super().__init__(msg or f"fetch exceeded deadline of {deadline_s}s")
+        self.deadline_s = deadline_s
+
+
+# --------------------------------------------------------------------------
+# Retry policy
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RetryPolicy:
+    """Bounded retries with exponential backoff + seeded deterministic jitter.
+
+    ``call`` runs ``fn`` up to ``max_attempts`` times, sleeping
+    ``base_delay * backoff**attempt * (1 + jitter*u)`` between attempts
+    (``u`` drawn from a seeded rng, so delay sequences are reproducible).
+    Only ``retryable`` classes are retried; everything else propagates on
+    first raise. ``sleep`` is injectable so tests never block, and an
+    optional ``abort`` callable (checked before every retry) lets an
+    abandoned producer thread bail out of a backoff loop promptly.
+    """
+
+    max_attempts: int = 3
+    base_delay: float = 0.005
+    max_delay: float = 0.5
+    backoff: float = 2.0
+    jitter: float = 0.5
+    retryable: tuple = (TransientStoreError,)
+    seed: int = 0
+    sleep: Callable[[float], None] = time.sleep
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+        self._lock = threading.Lock()
+
+    def delay(self, attempt: int) -> float:
+        with self._lock:
+            u = float(self._rng.random())
+        d = self.base_delay * (self.backoff ** attempt) * (1.0
+                                                           + self.jitter * u)
+        return min(d, self.max_delay)
+
+    def is_retryable(self, exc: BaseException) -> bool:
+        return isinstance(exc, self.retryable)
+
+    def call(self, fn: Callable, *, abort: Optional[Callable[[], bool]] = None,
+             on_retry: Optional[Callable[[BaseException], None]] = None):
+        last: Optional[BaseException] = None
+        for attempt in range(self.max_attempts):
+            if abort is not None and abort():
+                break
+            try:
+                return fn()
+            except BaseException as exc:  # noqa: BLE001 - filtered below
+                if not self.is_retryable(exc):
+                    raise
+                last = exc
+                if on_retry is not None:
+                    on_retry(exc)
+                if attempt + 1 < self.max_attempts:
+                    self.sleep(self.delay(attempt))
+        if last is None:  # aborted before the first attempt
+            raise TransientStoreError("fetch aborted (consumer gone)")
+        raise last
+
+
+# --------------------------------------------------------------------------
+# Circuit breaker
+# --------------------------------------------------------------------------
+
+class CircuitBreaker:
+    """Closed -> open (N consecutive failures) -> half-open probe -> closed.
+
+    ``allow()`` gates a call: True while closed, False while open and inside
+    the cooldown, and True exactly once per cooldown expiry (the half-open
+    probe — a success closes the breaker, a failure re-opens it and restarts
+    the cooldown). The clock is injectable for deterministic tests; with
+    ``recovery_time=0`` every post-trip call is a probe, which keeps chaos
+    schedules (counted in calls) deterministic.
+    """
+
+    CLOSED, OPEN, HALF_OPEN = "closed", "open", "half_open"
+
+    def __init__(self, failure_threshold: int = 3, recovery_time: float = 0.05,
+                 clock: Callable[[], float] = time.monotonic):
+        self.failure_threshold = failure_threshold
+        self.recovery_time = recovery_time
+        self.clock = clock
+        self._state = self.CLOSED
+        self._consecutive = 0
+        self._opened_at = 0.0
+        self.trips = 0          # closed/half-open -> open transitions
+        self.recoveries = 0     # half-open -> closed transitions
+        self._lock = threading.Lock()
+
+    @property
+    def state(self) -> str:
+        with self._lock:
+            return self._state
+
+    def allow(self) -> bool:
+        with self._lock:
+            if self._state == self.CLOSED:
+                return True
+            if self._state == self.OPEN and (
+                    self.clock() - self._opened_at >= self.recovery_time):
+                self._state = self.HALF_OPEN
+                return True
+            return False  # open (cooling down) or a probe already in flight
+
+    def record_success(self):
+        with self._lock:
+            if self._state == self.HALF_OPEN:
+                self.recoveries += 1
+            self._state = self.CLOSED
+            self._consecutive = 0
+
+    def record_failure(self):
+        with self._lock:
+            self._consecutive += 1
+            if self._state == self.HALF_OPEN or (
+                    self._state == self.CLOSED
+                    and self._consecutive >= self.failure_threshold):
+                self._state = self.OPEN
+                self._opened_at = self.clock()
+                self.trips += 1
+
+
+def _fresh_health() -> Dict[str, int]:
+    return {"requests": 0, "retries": 0, "failures": 0, "timeouts": 0,
+            "breaker_trips": 0, "breaker_recoveries": 0, "degraded_rows": 0,
+            "stale_rows": 0}
+
+
+def _find_routed(store):
+    """Walk the ``.inner`` chain to the partition-routing backend, if any."""
+    s = store
+    while s is not None:
+        if hasattr(s, "_route") and hasattr(s, "num_parts"):
+            return s
+        s = getattr(s, "inner", None)
+    return None
+
+
+class _RowCache:
+    """Bounded last-known-good row cache: a vectorised FIFO ring.
+
+    ``slot_of`` maps global row -> ring slot (-1 = not cached); ``owner``
+    maps slot -> global row so a wrapping head evicts in insertion order.
+    put/get are pure NumPy gathers/scatters — no per-row Python — which is
+    what keeps the zero-fault resilience overhead in the noise.
+    """
+
+    def __init__(self, num_rows: int, capacity: int):
+        self.capacity = max(int(capacity), 1)
+        self.slot_of = np.full(num_rows, -1, np.int64)
+        self.owner = np.full(self.capacity, -1, np.int64)
+        self.vals: Optional[np.ndarray] = None
+        self.head = 0
+
+    def put(self, rows: np.ndarray, values: np.ndarray):
+        rows = np.asarray(rows, np.int64)
+        if len(rows) > self.capacity:  # keep the newest `capacity` rows
+            rows, values = rows[-self.capacity:], values[-self.capacity:]
+        if self.vals is None:
+            self.vals = np.zeros((self.capacity,) + values.shape[1:],
+                                 values.dtype)
+        slot = self.slot_of[rows]
+        new = slot < 0
+        k = int(new.sum())
+        if k:
+            idx = (self.head + np.arange(k)) % self.capacity
+            prev = self.owner[idx]
+            self.slot_of[prev[prev >= 0]] = -1
+            self.owner[idx] = rows[new]
+            self.slot_of[rows[new]] = idx
+            self.head = (self.head + k) % self.capacity
+            slot = self.slot_of[rows]
+        self.vals[slot] = values
+
+    def get(self, rows: np.ndarray) -> Tuple[Optional[np.ndarray],
+                                             np.ndarray]:
+        """-> (values for the cached subset, have-mask over ``rows``)."""
+        rows = np.asarray(rows, np.int64)
+        slot = self.slot_of[rows]
+        have = slot >= 0
+        if self.vals is None:
+            return None, np.zeros(len(rows), bool)
+        return self.vals[slot[have]], have
+
+
+# --------------------------------------------------------------------------
+# Resilient feature store
+# --------------------------------------------------------------------------
+
+class ResilientFeatureStore(FeatureStore):
+    """Retry + deadline + per-partition breaker + stale-cache degradation.
+
+    Wraps any ``FeatureStore``. Fetches fan out per home partition (when the
+    wrapped chain exposes a routing table) on a small shared thread pool, so
+    one slow or retrying partition overlaps the others; each partition task
+    runs its bounded retries behind that partition's circuit breaker, and a
+    per-fetch ``deadline`` bounds the whole gather. A partition that stays
+    down degrades instead of raising: its rows are served from a bounded
+    last-known-good row cache (missing rows become fill rows), the mask of
+    degraded rows is surfaced through ``get_padded_resilient`` and every
+    degradation is counted in ``health``.
+    """
+
+    def __init__(self, inner: FeatureStore, *,
+                 retry: Optional[RetryPolicy] = None,
+                 deadline: Optional[float] = None,
+                 failure_threshold: int = 3,
+                 recovery_time: float = 0.05,
+                 clock: Callable[[], float] = time.monotonic,
+                 max_cache_rows: int = 65536,
+                 max_workers: int = 4):
+        self.inner = inner
+        self.retry = retry if retry is not None else RetryPolicy()
+        self.deadline = deadline
+        self.health = _fresh_health()
+        self._routed = _find_routed(inner)
+        self._breakers: Dict[int, CircuitBreaker] = {}
+        self._breaker_cfg = (failure_threshold, recovery_time, clock)
+        self._caches: Dict[Key, _RowCache] = {}
+        self.max_cache_rows = max_cache_rows
+        self._meta: Dict[Key, Tuple[tuple, np.dtype]] = {}
+        self._pool = ThreadPoolExecutor(max_workers=max_workers,
+                                        thread_name_prefix="store-fetch")
+        self._lock = threading.Lock()
+
+    # ---- breaker / cache plumbing ----
+    def breaker(self, partition: int) -> CircuitBreaker:
+        with self._lock:
+            if partition not in self._breakers:
+                th, rt, clk = self._breaker_cfg
+                self._breakers[partition] = CircuitBreaker(
+                    failure_threshold=th, recovery_time=rt, clock=clk)
+            return self._breakers[partition]
+
+    def breaker_states(self) -> Dict[int, str]:
+        with self._lock:
+            return {p: b.state for p, b in self._breakers.items()}
+
+    def _row_cache(self, key: Key) -> _RowCache:
+        with self._lock:
+            if key not in self._caches:
+                n = int(self.inner._size(key)[0])
+                self._caches[key] = _RowCache(n, self.max_cache_rows)
+            return self._caches[key]
+
+    # ---- the fetch engine ----
+    def _routed_partition(self, key: Key, index: np.ndarray):
+        if self._routed is None:
+            return None
+        route = getattr(self._routed, "_route", {}).get(key)
+        if route is None:
+            return None
+        return np.asarray(route)[index]
+
+    def _fetch_partition(self, key: Key, rows: np.ndarray, partition: int
+                         ) -> np.ndarray:
+        """One partition's gather: breaker gate + bounded retries."""
+        brk = self.breaker(partition)
+        if not brk.allow():
+            raise PartitionUnavailableError(
+                partition, f"breaker open for partition {partition}")
+
+        def once():
+            return self.inner._get(key, rows)
+
+        def on_retry(exc):
+            with self._lock:
+                self.health["retries"] += 1
+            brk.record_failure()
+
+        try:
+            out = self.retry.call(once, on_retry=on_retry)
+        except StoreError:
+            brk.record_failure()
+            raise
+        brk.record_success()
+        return np.asarray(out)
+
+    def _fetch(self, key: Key, index: np.ndarray,
+               deadline: Optional[float] = None
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        """Gather ``index`` rows -> (values, degraded_mask).
+
+        Partition tasks run concurrently; a partition whose task fails (or
+        misses the deadline) is *degraded* — served from the last-known-good
+        cache / fill rows — rather than raised, unless nothing has ever been
+        fetched successfully (no dtype/shape to degrade to).
+        """
+        index = np.asarray(index)
+        deadline = self.deadline if deadline is None else deadline
+        with self._lock:
+            self.health["requests"] += 1
+        part = self._routed_partition(key, index)
+        if part is None:
+            groups = [(0, np.arange(len(index)))]
+        else:
+            groups = [(int(p), np.where(part == p)[0])
+                      for p in np.unique(part)]
+        futures = [(p, pos, self._pool.submit(
+            self._fetch_partition, key, index[pos], p))
+            for p, pos in groups if len(pos)]
+        t0 = time.monotonic()
+        results: List[Tuple[int, np.ndarray, Optional[np.ndarray]]] = []
+        for p, pos, fut in futures:
+            budget = (None if deadline is None
+                      else max(deadline - (time.monotonic() - t0), 0.0))
+            try:
+                vals = fut.result(timeout=budget)
+            except _FutureTimeout:
+                fut.cancel()
+                with self._lock:
+                    self.health["timeouts"] += 1
+                    self.health["failures"] += 1
+                self.breaker(p).record_failure()
+                vals = None
+            except StoreError:
+                with self._lock:
+                    self.health["failures"] += 1
+                vals = None
+            results.append((p, pos, vals))
+        good = next((v for _, _, v in results if v is not None), None)
+        if good is not None:
+            self._meta[key] = (good.shape[1:], good.dtype)
+        meta = self._meta.get(key)
+        if meta is None:
+            raise TransientStoreError(
+                f"fetch of {key} failed with no last-known-good data to "
+                f"degrade to")
+        feat_shape, dtype = meta
+        out = np.zeros((len(index),) + tuple(feat_shape), dtype=dtype)
+        degraded = np.zeros(len(index), dtype=bool)
+        cache = self._row_cache(key)
+        for p, pos, vals in results:
+            if vals is not None:
+                out[pos] = vals
+                with self._lock:
+                    cache.put(index[pos], vals)
+                continue
+            degraded[pos] = True
+            with self._lock:
+                hits, have = cache.get(index[pos])
+            if hits is not None and have.any():
+                out[pos[have]] = hits
+            with self._lock:
+                self.health["degraded_rows"] += len(pos)
+                self.health["stale_rows"] += int(have.sum())
+        self._sync_breaker_health()
+        return out, degraded
+
+    def _sync_breaker_health(self):
+        with self._lock:
+            self.health["breaker_trips"] = sum(
+                b.trips for b in self._breakers.values())
+            self.health["breaker_recoveries"] = sum(
+                b.recoveries for b in self._breakers.values())
+
+    # ---- FeatureStore interface ----
+    def _put(self, key: Key, tensor: np.ndarray):
+        self.inner._put(key, tensor)
+
+    def _get(self, key: Key, index):
+        if index is None:
+            n = self._size_with_retry(key)[0]
+            index = np.arange(n)
+        out, _ = self._fetch(key, np.asarray(index))
+        return out
+
+    def _size(self, key: Key):
+        return self._size_with_retry(key)
+
+    def _size_with_retry(self, key: Key):
+        return self.retry.call(lambda: self.inner._size(key))
+
+    def get_padded_resilient(self, index: np.ndarray, *, group: str = "node",
+                             attr: str = "x", fill: float = 0.0,
+                             deadline: Optional[float] = None
+                             ) -> Tuple[np.ndarray, np.ndarray]:
+        """``get_padded`` + the degraded-row mask (the loader's fetch op).
+
+        Pads (-1 ids) never generate storage traffic; degraded rows are
+        rows whose home partition failed this fetch (served stale or fill).
+        """
+        index = np.asarray(index)
+        valid = index >= 0
+        key = (group, attr)
+        if not valid.any():
+            if key not in self._meta:
+                probe = self.retry.call(
+                    lambda: self.inner._get(key, np.zeros(0, np.int64)))
+                self._meta[key] = (np.asarray(probe).shape[1:],
+                                   np.asarray(probe).dtype)
+            feat_shape, dtype = self._meta[key]
+            return (np.full((len(index),) + tuple(feat_shape), fill, dtype),
+                    np.zeros(len(index), dtype=bool))
+        rows, dmask = self._fetch(key, index[valid], deadline=deadline)
+        out = np.full((len(index),) + rows.shape[1:], fill, dtype=rows.dtype)
+        out[valid] = rows
+        degraded = np.zeros(len(index), dtype=bool)
+        degraded[valid] = dmask
+        return out, degraded
+
+
+# --------------------------------------------------------------------------
+# Resilient graph store
+# --------------------------------------------------------------------------
+
+class ResilientGraphStore(GraphStore):
+    """Retry + deadline + breaker + stale-topology degradation for graphs.
+
+    Topology fetches (`_get`, consumed by ``get_csr``/``get_rev_csr``) are
+    retried under a single breaker; after the first success the COO is kept
+    as last-known-good, so a later backend outage serves the stale topology
+    (counted in ``health['stale_topology']``) instead of failing the
+    sampler. CSR/CSC caches live in the wrapper, independent of the inner
+    store's.
+    """
+
+    def __init__(self, inner: GraphStore, *,
+                 retry: Optional[RetryPolicy] = None,
+                 deadline: Optional[float] = None,
+                 failure_threshold: int = 3,
+                 recovery_time: float = 0.05,
+                 clock: Callable[[], float] = time.monotonic,
+                 max_workers: int = 2):
+        self.inner = inner
+        self.retry = retry if retry is not None else RetryPolicy()
+        self.deadline = deadline
+        self.breaker = CircuitBreaker(failure_threshold=failure_threshold,
+                                      recovery_time=recovery_time,
+                                      clock=clock)
+        self.health = _fresh_health()
+        self.health["stale_topology"] = 0
+        self._last_good: Dict[EdgeType, tuple] = {}
+        self._caches: Dict[Tuple[EdgeType, str], object] = {}
+        self._pool = ThreadPoolExecutor(max_workers=max_workers,
+                                        thread_name_prefix="graph-fetch")
+        self._lock = threading.Lock()
+
+    def _put(self, etype: EdgeType, coo: tuple):
+        self.inner._put(etype, coo)
+        with self._lock:
+            self._caches = {k: v for k, v in self._caches.items()
+                            if k[0] != etype}
+
+    def _get(self, etype: EdgeType):
+        with self._lock:
+            self.health["requests"] += 1
+        if not self.breaker.allow():
+            return self._degrade(etype, PartitionUnavailableError(
+                0, "graph store breaker open"))
+
+        def once():
+            fut = self._pool.submit(self.inner._get, etype)
+            try:
+                return fut.result(timeout=self.deadline)
+            except _FutureTimeout:
+                fut.cancel()
+                with self._lock:
+                    self.health["timeouts"] += 1
+                raise FetchTimeoutError(self.deadline or 0.0)
+
+        def on_retry(exc):
+            with self._lock:
+                self.health["retries"] += 1
+            self.breaker.record_failure()
+
+        try:
+            coo = self.retry.call(once, on_retry=on_retry)
+        except StoreError as exc:
+            self.breaker.record_failure()
+            self._sync_breaker_health()
+            return self._degrade(etype, exc)
+        self.breaker.record_success()
+        self._sync_breaker_health()
+        with self._lock:
+            self._last_good[etype] = coo
+        return coo
+
+    def _degrade(self, etype: EdgeType, exc: StoreError):
+        with self._lock:
+            self.health["failures"] += 1
+            stale = self._last_good.get(etype)
+            if stale is not None:
+                self.health["stale_topology"] += 1
+                return stale
+        raise exc
+
+    def _sync_breaker_health(self):
+        with self._lock:
+            self.health["breaker_trips"] = self.breaker.trips
+            self.health["breaker_recoveries"] = self.breaker.recoveries
+
+    def _cache(self, etype: EdgeType, key: str):
+        with self._lock:
+            return self._caches.get((etype, key))
+
+    def _set_cache(self, etype: EdgeType, key: str, csr):
+        with self._lock:
+            self._caches[(etype, key)] = csr
+
+    def edge_types(self):
+        return self.inner.edge_types()
+
+
+# --------------------------------------------------------------------------
+# Deterministic chaos injection
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FailureSchedule:
+    """Seeded, reproducible fault plan for the chaos wrappers.
+
+    Decisions are drawn from *per-partition* rng streams keyed by
+    ``(seed, partition)`` and indexed by that partition's own call counter,
+    so the fault sequence each partition sees is independent of how calls
+    to other partitions interleave (the resilient fan-out runs partitions
+    concurrently). ``blackout`` maps partition -> [(start, stop)] windows in
+    that partition's call counts: calls ``start <= c < stop`` raise
+    ``PartitionUnavailableError``. Unrouted calls use stream -1.
+    """
+
+    seed: int = 0
+    error_rate: float = 0.0
+    latency_rate: float = 0.0
+    latency_s: float = 0.0
+    blackout: Dict[int, List[Tuple[int, int]]] = dataclasses.field(
+        default_factory=dict)
+    sleep: Callable[[float], None] = time.sleep
+
+    def __post_init__(self):
+        self._rng: Dict[int, np.random.Generator] = {}
+        self._count: Dict[int, int] = {}
+        self._lock = threading.Lock()
+        self.injected = {"errors": 0, "latency": 0, "blackout": 0,
+                         "calls": 0}
+
+    def reset(self):
+        """Rewind every stream (identical schedule for a fresh run)."""
+        with self._lock:
+            self._rng.clear()
+            self._count.clear()
+            self.injected = {"errors": 0, "latency": 0, "blackout": 0,
+                             "calls": 0}
+
+    def _stream(self, partition: int) -> np.random.Generator:
+        if partition not in self._rng:
+            self._rng[partition] = np.random.default_rng(
+                [self.seed, partition & 0xFFFFFFFF])
+        return self._rng[partition]
+
+    def check(self, partition: int):
+        """Advance partition's stream one call; raise/sleep per the plan."""
+        with self._lock:
+            c = self._count.get(partition, 0)
+            self._count[partition] = c + 1
+            self.injected["calls"] += 1
+            u = float(self._stream(partition).random())
+            for lo, hi in self.blackout.get(partition, ()):
+                if lo <= c < hi:
+                    self.injected["blackout"] += 1
+                    raise PartitionUnavailableError(
+                        partition, f"injected blackout (call {c})")
+            if u < self.error_rate:
+                self.injected["errors"] += 1
+                raise TransientStoreError(
+                    f"injected transient fault (partition {partition}, "
+                    f"call {c})")
+            do_latency = u < self.error_rate + self.latency_rate
+        if do_latency:
+            with self._lock:
+                self.injected["latency"] += 1
+            self.sleep(self.latency_s)
+
+    def calls(self, partition: int) -> int:
+        with self._lock:
+            return self._count.get(partition, 0)
+
+
+class ChaosFeatureStore(FeatureStore):
+    """Deterministic fault-injecting decorator for any ``FeatureStore``.
+
+    Each ``_get`` consults the ``FailureSchedule`` before delegating; the
+    partition key is the (single) home partition of the requested rows when
+    the wrapped chain routes (the resilient fan-out sends one partition per
+    call), else -1. ``_put``/``_size`` pass through untouched.
+    """
+
+    def __init__(self, inner: FeatureStore, schedule: FailureSchedule):
+        self.inner = inner
+        self.schedule = schedule
+        self._routed = _find_routed(inner)
+
+    def _partition_of(self, key: Key, index) -> int:
+        if self._routed is None or index is None:
+            return -1
+        route = getattr(self._routed, "_route", {}).get(key)
+        if route is None:
+            return -1
+        index = np.asarray(index)
+        if index.size == 0:
+            return -1
+        parts = np.unique(np.asarray(route)[index])
+        return int(parts[0]) if len(parts) == 1 else -1
+
+    def _put(self, key, tensor):
+        self.inner._put(key, tensor)
+
+    def _get(self, key, index):
+        self.schedule.check(self._partition_of(key, index))
+        return self.inner._get(key, index)
+
+    def _size(self, key):
+        return self.inner._size(key)
+
+
+class ChaosGraphStore(GraphStore):
+    """Deterministic fault-injecting decorator for any ``GraphStore``.
+
+    Injects on topology fetches (`_get`) from stream -1 of the schedule;
+    caches are NOT delegated to the inner store, so every ``get_csr`` of a
+    fresh wrapper exercises the fetch path.
+    """
+
+    def __init__(self, inner: GraphStore, schedule: FailureSchedule):
+        self.inner = inner
+        self.schedule = schedule
+        self._caches: Dict[Tuple[EdgeType, str], object] = {}
+
+    def _put(self, etype, coo):
+        self.inner._put(etype, coo)
+        self._caches = {k: v for k, v in self._caches.items()
+                        if k[0] != etype}
+
+    def _get(self, etype):
+        self.schedule.check(-1)
+        return self.inner._get(etype)
+
+    def _cache(self, etype, key):
+        return self._caches.get((etype, key))
+
+    def _set_cache(self, etype, key, csr):
+        self._caches[(etype, key)] = csr
+
+    def edge_types(self):
+        return self.inner.edge_types()

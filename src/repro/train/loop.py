@@ -4,7 +4,10 @@
 periodic (optionally async) checkpointing, per-step host timing into the
 StragglerMonitor, optional error-feedback int8 gradient compression at the
 pod boundary. ``SimulatedFailure`` lets tests kill the loop at an exact step
-and assert bit-exact resume.
+and assert bit-exact resume. Storage-layer faults compose from below: a
+loader with ``on_batch_error="skip"`` simply yields fewer batches, the loop
+rides an exhausted iterator out cleanly, and ``loader=`` snapshots the
+loader's ``health`` counters into logs and the returned dict.
 """
 
 from __future__ import annotations
@@ -36,10 +39,16 @@ def train_loop(state: opt_lib.TrainState,
                monitor: Optional[StragglerMonitor] = None,
                fail_at: Optional[int] = None,
                log_every: int = 10,
+               loader: Optional[Any] = None,
                log_fn: Callable = print) -> Dict[str, Any]:
     """Run ``num_steps`` steps (resuming from the latest checkpoint if any).
 
-    Returns {'state': final_state, 'history': [(step, loss), ...]}.
+    Returns {'state': final_state, 'history': [(step, loss), ...],
+    'loader_health': ...}. A loader running with ``on_batch_error="skip"``
+    yields fewer batches than seed batches under store faults; the loop
+    treats an exhausted iterator as end-of-data (logged, not crashed) and,
+    when ``loader`` is given, snapshots its ``health`` counters (retries,
+    skipped batches, degraded rows) into the result and the periodic log.
     """
     start = 0
     if ckpt_dir is not None:
@@ -51,7 +60,14 @@ def train_loop(state: opt_lib.TrainState,
     history = []
     pending = None
     for step in range(start, num_steps):
-        batch = next(batches)
+        try:
+            batch = next(batches)
+        except StopIteration:
+            # skipped batches (loader on_batch_error="skip") can exhaust
+            # the epoch early — end the run cleanly instead of crashing
+            log_fn(f"[data] iterator exhausted at step {step} "
+                   f"(skipped batches?) — stopping")
+            break
         t0 = time.perf_counter()
         state, metrics = train_step(state, batch)
         jax.block_until_ready(metrics["loss"])
@@ -61,8 +77,10 @@ def train_loop(state: opt_lib.TrainState,
         loss = float(metrics["loss"])
         history.append((step + 1, loss))
         if (step + 1) % log_every == 0:
+            health = ("" if loader is None or not hasattr(loader, "health")
+                      else f" health={dict(loader.health)}")
             log_fn(f"step {step + 1}: loss={loss:.4f} "
-                   f"({dt * 1e3:.0f} ms)")
+                   f"({dt * 1e3:.0f} ms){health}")
         if ckpt_dir is not None and (step + 1) % ckpt_every == 0:
             if pending is not None:
                 pending.join()
@@ -75,7 +93,11 @@ def train_loop(state: opt_lib.TrainState,
             raise SimulatedFailure(f"injected failure at step {step + 1}")
     if pending is not None:
         pending.join()
-    return {"state": state, "history": history}
+    loader_health = (dict(loader.health)
+                     if loader is not None and hasattr(loader, "health")
+                     else None)
+    return {"state": state, "history": history,
+            "loader_health": loader_health}
 
 
 # EF-int8-compressed train steps live in repro.train.steps

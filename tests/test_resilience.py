@@ -1,0 +1,709 @@
+"""Fault-tolerant store-backed loading: retries, deadlines, breakers,
+stale-cache degradation, chaos injection, loader/train/serve policies.
+
+All chaos here is DETERMINISTIC (seeded per-partition schedules, injectable
+sleeps/clocks): no assertion depends on wall time.
+"""
+
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.data import Data
+from repro.data.feature_store import InMemoryFeatureStore
+from repro.data.graph_store import InMemoryGraphStore
+from repro.data.loader import NeighborLoader
+from repro.data.partition import build_partitioned_stores
+from repro.data.resilience import (ChaosFeatureStore, ChaosGraphStore,
+                                   CircuitBreaker, FailureSchedule,
+                                   FetchTimeoutError,
+                                   PartitionUnavailableError,
+                                   ResilientFeatureStore,
+                                   ResilientGraphStore, RetryPolicy,
+                                   StoreError, TransientStoreError)
+
+
+def _no_sleep(_):  # injectable sleep: tests never block on backoff
+    pass
+
+
+def _policy(**kw):
+    kw.setdefault("sleep", _no_sleep)
+    return RetryPolicy(**kw)
+
+
+def _stores(rng, n=120, e=600, parts=4, feat=8):
+    ei = np.stack([rng.integers(0, n, e), rng.integers(0, n, e)])
+    x = rng.standard_normal((n, feat)).astype(np.float32)
+    y = rng.integers(0, 3, n)
+    fs, gs, part = build_partitioned_stores(x, ei, parts, y=y)
+    return fs, gs, part, x, y
+
+
+# ---------------------------------------------------------------------------
+# RetryPolicy
+# ---------------------------------------------------------------------------
+
+def test_retry_policy_retries_then_succeeds():
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        if len(calls) < 3:
+            raise TransientStoreError("flaky")
+        return "ok"
+
+    assert _policy(max_attempts=3).call(flaky) == "ok"
+    assert len(calls) == 3
+
+
+def test_retry_policy_exhaustion_raises_last():
+    with pytest.raises(TransientStoreError, match="always"):
+        _policy(max_attempts=2).call(
+            lambda: (_ for _ in ()).throw(TransientStoreError("always")))
+
+
+def test_retry_policy_non_retryable_propagates_immediately():
+    calls = []
+
+    def bug():
+        calls.append(1)
+        raise ValueError("a bug, not a fault")
+
+    with pytest.raises(ValueError):
+        _policy(max_attempts=5).call(bug)
+    assert len(calls) == 1
+
+
+def test_retry_policy_deterministic_jitter():
+    a = RetryPolicy(seed=42, sleep=_no_sleep)
+    b = RetryPolicy(seed=42, sleep=_no_sleep)
+    da = [a.delay(i) for i in range(6)]
+    db = [b.delay(i) for i in range(6)]
+    assert da == db
+    assert all(d <= a.max_delay for d in da)
+    # backoff grows until the cap
+    assert da[1] > da[0] * 1.2
+
+
+def test_retry_policy_abort_hook_bounds_the_loop():
+    calls = []
+
+    def failing():
+        calls.append(1)
+        raise TransientStoreError("down")
+
+    with pytest.raises(TransientStoreError):
+        _policy(max_attempts=100).call(failing,
+                                       abort=lambda: len(calls) >= 3)
+    assert len(calls) == 3
+
+
+# ---------------------------------------------------------------------------
+# CircuitBreaker
+# ---------------------------------------------------------------------------
+
+def test_breaker_trips_after_consecutive_failures():
+    clock = [0.0]
+    b = CircuitBreaker(failure_threshold=3, recovery_time=10.0,
+                       clock=lambda: clock[0])
+    for _ in range(2):
+        b.record_failure()
+    assert b.state == "closed" and b.allow()
+    b.record_failure()
+    assert b.state == "open" and b.trips == 1
+    assert not b.allow()  # cooling down
+
+
+def test_breaker_half_open_probe_then_close():
+    clock = [0.0]
+    b = CircuitBreaker(failure_threshold=1, recovery_time=5.0,
+                       clock=lambda: clock[0])
+    b.record_failure()
+    assert not b.allow()
+    clock[0] = 6.0  # cooldown elapsed -> exactly one probe
+    assert b.allow()
+    assert not b.allow()  # a probe is already in flight
+    b.record_success()
+    assert b.state == "closed" and b.recoveries == 1
+    assert b.allow()
+
+
+def test_breaker_half_open_failure_reopens():
+    clock = [0.0]
+    b = CircuitBreaker(failure_threshold=2, recovery_time=1.0,
+                       clock=lambda: clock[0])
+    b.record_failure()
+    b.record_failure()
+    clock[0] = 2.0
+    assert b.allow()       # probe
+    b.record_failure()     # probe fails
+    assert b.state == "open" and b.trips == 2
+    assert not b.allow()   # cooldown restarted at t=2
+
+
+def test_breaker_success_resets_consecutive_count():
+    b = CircuitBreaker(failure_threshold=2)
+    b.record_failure()
+    b.record_success()
+    b.record_failure()
+    assert b.state == "closed"  # failures were not consecutive
+
+
+# ---------------------------------------------------------------------------
+# Chaos determinism
+# ---------------------------------------------------------------------------
+
+@pytest.mark.chaos
+def test_failure_schedule_is_deterministic():
+    def drive(schedule):
+        outcomes = []
+        for p in (0, 1, 0, 1, 0, 1, 2, 2, 0, 1) * 10:
+            try:
+                schedule.check(p)
+                outcomes.append((p, "ok"))
+            except PartitionUnavailableError:
+                outcomes.append((p, "blackout"))
+            except TransientStoreError:
+                outcomes.append((p, "error"))
+        return outcomes
+
+    mk = lambda: FailureSchedule(seed=9, error_rate=0.3,
+                                 blackout={1: [(5, 15)]}, sleep=_no_sleep)
+    a, b = drive(mk()), drive(mk())
+    assert a == b
+    assert ("1", "blackout") not in a  # sanity: keys are ints
+    assert any(o == "blackout" for _, o in a)
+    assert any(o == "error" for _, o in a)
+    # reset rewinds the stream
+    s = mk()
+    first = drive(s)
+    s.reset()
+    assert drive(s) == first
+
+
+@pytest.mark.chaos
+def test_chaos_streams_independent_across_partitions():
+    """Partition 0's fault sequence must not depend on how many calls
+    partition 1 received (concurrent fan-out safety)."""
+    mk = lambda: FailureSchedule(seed=3, error_rate=0.5, sleep=_no_sleep)
+
+    def seq(schedule, part, n=40):
+        out = []
+        for _ in range(n):
+            try:
+                schedule.check(part)
+                out.append("ok")
+            except TransientStoreError:
+                out.append("err")
+        return out
+
+    s1 = mk()
+    a = seq(s1, 0)
+    s2 = mk()
+    seq(s2, 1, n=17)  # interleave extra partition-1 traffic
+    b = seq(s2, 0)
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# ResilientFeatureStore
+# ---------------------------------------------------------------------------
+
+def test_resilient_store_transparent_without_faults(rng):
+    fs, _, _, x, _ = _stores(rng)
+    res = ResilientFeatureStore(fs, retry=_policy())
+    idx = rng.integers(0, len(x), 30)
+    np.testing.assert_allclose(res.get_tensor(index=idx), x[idx])
+    out, degraded = res.get_padded_resilient(
+        np.array([3, -1, 7]), group="node", attr="x")
+    np.testing.assert_allclose(out[0], x[3])
+    assert (out[1] == 0).all() and not degraded.any()
+    assert res.health["degraded_rows"] == 0
+    assert res.get_tensor_size(group="node", attr="x") == x.shape
+
+
+@pytest.mark.chaos
+def test_resilient_store_retries_transient_faults(rng):
+    fs, _, _, x, _ = _stores(rng)
+    schedule = FailureSchedule(seed=1, error_rate=0.4, sleep=_no_sleep)
+    res = ResilientFeatureStore(ChaosFeatureStore(fs, schedule),
+                                retry=_policy(max_attempts=8),
+                                failure_threshold=100)
+    for _ in range(20):
+        idx = rng.integers(0, len(x), 25)
+        out, degraded = res.get_padded_resilient(idx)
+        np.testing.assert_allclose(out, x[idx])
+        assert not degraded.any()
+    assert res.health["retries"] > 0
+    assert schedule.injected["errors"] == res.health["retries"]
+
+
+@pytest.mark.chaos
+def test_resilient_store_degrades_to_stale_cache(rng):
+    """Rows homed on a blacked-out partition come from the last-known-good
+    cache, flagged degraded, instead of crashing."""
+    fs, _, part, x, _ = _stores(rng, parts=4)
+    dead = 2
+    schedule = FailureSchedule(seed=0, blackout={dead: [(1, 10_000)]},
+                               sleep=_no_sleep)
+    res = ResilientFeatureStore(ChaosFeatureStore(fs, schedule),
+                                retry=_policy(max_attempts=2),
+                                failure_threshold=3, recovery_time=0.0)
+    idx = np.arange(len(x))
+    warm, dmask = res.get_padded_resilient(idx)  # call 0: everything fresh
+    assert not dmask.any()
+    np.testing.assert_allclose(warm, x)
+    out, degraded = res.get_padded_resilient(idx)  # partition `dead` down
+    np.testing.assert_allclose(out, x)  # stale == original (nothing moved)
+    np.testing.assert_array_equal(degraded, part[idx] == dead)
+    assert res.health["degraded_rows"] == int((part == dead).sum())
+    assert res.health["stale_rows"] == res.health["degraded_rows"]
+    # keep hammering: the breaker trips and later probes keep degrading
+    for _ in range(6):
+        out, _ = res.get_padded_resilient(idx)
+        np.testing.assert_allclose(out, x)
+    assert res.health["breaker_trips"] >= 1
+    assert res.breaker_states()[dead] in ("open", "half_open")
+
+
+@pytest.mark.chaos
+def test_resilient_store_uncached_rows_degrade_to_zero(rng):
+    fs, _, part, x, _ = _stores(rng, parts=2)
+    dead = 1
+    schedule = FailureSchedule(seed=0, blackout={dead: [(0, 10_000)]},
+                               sleep=_no_sleep)
+    res = ResilientFeatureStore(ChaosFeatureStore(fs, schedule),
+                                retry=_policy(max_attempts=2),
+                                recovery_time=0.0)
+    idx = np.arange(len(x))
+    out, degraded = res.get_padded_resilient(idx)  # dead from the start
+    alive = part[idx] != dead
+    np.testing.assert_allclose(out[alive], x[alive])
+    assert (out[~alive] == 0).all()  # never cached -> zero rows
+    np.testing.assert_array_equal(degraded, ~alive)
+    assert res.health["stale_rows"] == 0
+
+
+@pytest.mark.chaos
+def test_resilient_store_recovers_after_blackout(rng):
+    fs, _, part, x, _ = _stores(rng, parts=2)
+    dead = 0
+    schedule = FailureSchedule(seed=0, blackout={dead: [(1, 6)]},
+                               sleep=_no_sleep)
+    res = ResilientFeatureStore(ChaosFeatureStore(fs, schedule),
+                                retry=_policy(max_attempts=1),
+                                failure_threshold=2, recovery_time=0.0)
+    idx = np.arange(len(x))
+    res.get_padded_resilient(idx)  # warm (call 0 per partition)
+    seen_degraded = False
+    for _ in range(12):  # rides through the window: probes advance calls
+        out, dmask = res.get_padded_resilient(idx)
+        np.testing.assert_allclose(out, x)
+        seen_degraded |= bool(dmask.any())
+    assert seen_degraded
+    assert res.health["breaker_trips"] >= 1
+    assert res.health["breaker_recoveries"] >= 1
+    assert res.breaker_states()[dead] == "closed"
+    out, dmask = res.get_padded_resilient(idx)
+    assert not dmask.any()  # fully fresh again
+
+
+def test_resilient_store_first_fetch_total_failure_raises(rng):
+    fs, _, _, x, _ = _stores(rng, parts=2)
+    schedule = FailureSchedule(
+        seed=0, blackout={0: [(0, 100)], 1: [(0, 100)]}, sleep=_no_sleep)
+    res = ResilientFeatureStore(ChaosFeatureStore(fs, schedule),
+                                retry=_policy(max_attempts=2))
+    with pytest.raises(TransientStoreError, match="no last-known-good"):
+        res.get_padded_resilient(np.arange(10))
+
+
+@pytest.mark.chaos
+def test_resilient_store_deadline_degrades_slow_fetch(rng):
+    """A latency-spiked backend misses the per-fetch deadline: rows degrade
+    (stale) instead of stalling the producer."""
+    fs, _, _, x, _ = _stores(rng, parts=2)
+    schedule = FailureSchedule(seed=0, latency_rate=1.0, latency_s=0.25)
+    chaos = ChaosFeatureStore(fs, schedule)
+    res = ResilientFeatureStore(chaos, retry=_policy(max_attempts=1),
+                                recovery_time=0.0)
+    idx = np.arange(40)
+    res.get_padded_resilient(idx)  # warm the cache (slow but unbounded)
+    out, degraded = res.get_padded_resilient(idx, deadline=0.01)
+    assert degraded.all()
+    np.testing.assert_allclose(out, x[idx])  # all stale hits
+    assert res.health["timeouts"] >= 1
+
+
+def test_resilient_store_nonstore_errors_propagate(rng):
+    fs, _, _, _, _ = _stores(rng)
+    res = ResilientFeatureStore(fs, retry=_policy())
+    with pytest.raises(KeyError):
+        res.get_tensor(group="node", attr="nope", index=np.arange(3))
+
+
+# ---------------------------------------------------------------------------
+# ResilientGraphStore
+# ---------------------------------------------------------------------------
+
+@pytest.mark.chaos
+def test_resilient_graph_store_retries_and_serves_stale(rng):
+    n = 50
+    ei = np.stack([rng.integers(0, n, 200), rng.integers(0, n, 200)])
+    gs0 = InMemoryGraphStore()
+    gs0.put_edge_index(ei, num_nodes=n)
+    schedule = FailureSchedule(seed=2, error_rate=0.5, sleep=_no_sleep)
+    res = ResilientGraphStore(ChaosGraphStore(gs0, schedule),
+                              retry=_policy(max_attempts=10),
+                              failure_threshold=100)
+    csr = res.get_csr()
+    assert csr.num_edges == 200
+    # total blackout now: the cached CSR plus stale COO keep serving
+    schedule.error_rate = 1.0
+    assert res.get_rev_csr().num_edges == 200  # fresh fetch -> stale COO
+    assert res.health["stale_topology"] >= 1
+
+
+def test_resilient_graph_store_no_stale_raises(rng):
+    gs0 = InMemoryGraphStore()
+    gs0.put_edge_index(np.zeros((2, 0), np.int64), num_nodes=3)
+    schedule = FailureSchedule(seed=0, error_rate=1.0, sleep=_no_sleep)
+    res = ResilientGraphStore(ChaosGraphStore(gs0, schedule),
+                              retry=_policy(max_attempts=2))
+    with pytest.raises(TransientStoreError):
+        res.get_csr()
+
+
+# ---------------------------------------------------------------------------
+# Loader policy: on_batch_error + health counters
+# ---------------------------------------------------------------------------
+
+class _FlakyStore(InMemoryFeatureStore):
+    """Raises TransientStoreError on chosen _get calls (deterministic)."""
+
+    def __init__(self, fail_calls):
+        super().__init__()
+        self.fail_calls = set(fail_calls)
+        self.calls = 0
+
+    def _get(self, key, index):
+        c = self.calls
+        self.calls += 1
+        if c in self.fail_calls:
+            raise TransientStoreError(f"injected at call {c}")
+        return super()._get(key, index)
+
+
+def _flaky_loader(rng, fail_calls, **kw):
+    n = 64
+    ei = np.stack([rng.integers(0, n, 300), rng.integers(0, n, 300)])
+    x = rng.standard_normal((n, 8)).astype(np.float32)
+    fs = _FlakyStore(fail_calls)
+    fs.put_tensor(x)
+    gs = InMemoryGraphStore()
+    gs.put_edge_index(ei, num_nodes=n)
+    return NeighborLoader(fs, gs, num_neighbors=[3], batch_size=16,
+                          labels_attr=None, seed=0, **kw)
+
+
+@pytest.mark.parametrize("prefetch", [0, 2])
+def test_loader_on_batch_error_skip(rng, prefetch):
+    # 4 seed batches -> calls 0..3; fail call 1 persistently within retries
+    loader = _flaky_loader(rng, {1, 2}, on_batch_error="skip",
+                           batch_retries=1, prefetch=prefetch)
+    batches = list(loader)
+    assert len(batches) == 3  # one batch dropped
+    assert loader.health["skipped_batches"] == 1
+    assert loader.health["batch_retries"] == 1
+    assert loader.health["batches"] == 3
+
+
+@pytest.mark.parametrize("prefetch", [0, 2])
+def test_loader_on_batch_error_retry_succeeds(rng, prefetch):
+    loader = _flaky_loader(rng, {1}, on_batch_error="retry",
+                           batch_retries=2, prefetch=prefetch)
+    batches = list(loader)
+    assert len(batches) == 4  # retry re-fetches the failed batch
+    assert loader.health["batch_retries"] == 1
+    assert loader.health["skipped_batches"] == 0
+
+
+def test_loader_on_batch_error_retry_exhaustion_raises(rng):
+    loader = _flaky_loader(rng, set(range(1, 50)), on_batch_error="retry",
+                           batch_retries=2)
+    with pytest.raises(TransientStoreError):
+        list(loader)
+
+
+def test_loader_on_batch_error_raise_default(rng):
+    loader = _flaky_loader(rng, {1})
+    assert loader.on_batch_error == "raise"
+    with pytest.raises(TransientStoreError):
+        list(loader)
+
+
+def test_loader_rejects_unknown_policy(rng):
+    with pytest.raises(ValueError, match="on_batch_error"):
+        _flaky_loader(rng, set(), on_batch_error="explode")
+
+
+def test_loader_nonstore_error_never_skipped(rng):
+    """skip policy is for storage faults only — bugs must still raise."""
+    data = Data(x=np.zeros((20, 4), np.float32),
+                edge_index=np.stack([np.arange(10), np.arange(10) + 1]))
+
+    def boom(batch):
+        raise RuntimeError("a bug in transform")
+
+    loader = NeighborLoader(data, data, num_neighbors=[2], batch_size=4,
+                            labels_attr=None, transform=boom,
+                            on_batch_error="skip")
+    with pytest.raises(RuntimeError, match="a bug"):
+        list(loader)
+
+
+# ---------------------------------------------------------------------------
+# Producer-thread lifecycle under failure (satellite)
+# ---------------------------------------------------------------------------
+
+def test_prefetch_first_batch_exception_propagates(rng):
+    """An exception on the VERY FIRST batch with prefetch>0 must surface in
+    the consumer, not deadlock the bounded queue."""
+    loader = _flaky_loader(rng, {0}, prefetch=2)  # default raise policy
+    with pytest.raises(TransientStoreError, match="call 0"):
+        next(iter(loader))
+
+
+def test_prefetch_consumer_abandonment_mid_retry(rng):
+    """Closing the iterator while the producer is inside a long batch-retry
+    loop must reap the thread promptly (the abort hook)."""
+    import time
+
+    n = 64
+    ei = np.stack([rng.integers(0, n, 300), rng.integers(0, n, 300)])
+    x = rng.standard_normal((n, 8)).astype(np.float32)
+
+    retrying = threading.Event()
+
+    class _Stuck(InMemoryFeatureStore):
+        def __init__(self):
+            super().__init__()
+            self.calls = 0
+
+        def _get(self, key, index):
+            self.calls += 1
+            if self.calls > 1:  # first batch fine, then permanently down
+                retrying.set()
+                raise TransientStoreError("down for good")
+            return super()._get(key, index)
+
+    fs = _Stuck()
+    fs.put_tensor(x)
+    gs = InMemoryGraphStore()
+    gs.put_edge_index(ei, num_nodes=n)
+    loader = NeighborLoader(fs, gs, num_neighbors=[3], batch_size=16,
+                            labels_attr=None, prefetch=1,
+                            on_batch_error="retry", batch_retries=100_000,
+                            seed=0)
+    before = set(threading.enumerate())
+    it = iter(loader)
+    next(it)
+    assert retrying.wait(timeout=5.0)  # producer is mid-retry on batch 2
+    it.close()
+    deadline = time.time() + 5.0
+    extra = [t for t in threading.enumerate() if t not in before]
+    while extra and time.time() < deadline:
+        time.sleep(0.01)
+        extra = [t for t in threading.enumerate() if t not in before]
+    assert not extra, f"producer thread leaked mid-retry: {extra}"
+    # far fewer than 100k attempts: the abort hook cut the loop short
+    assert fs.calls < 50_000
+
+
+# ---------------------------------------------------------------------------
+# Degradation surfaces: Batch.extras + loader health + hetero
+# ---------------------------------------------------------------------------
+
+@pytest.mark.chaos
+def test_loader_batch_extras_degraded_mask(rng):
+    fs, gs, part, x, y = _stores(rng, n=200, e=1200)
+    dead = 1
+    schedule = FailureSchedule(seed=0, blackout={dead: [(1, 10_000)]},
+                               sleep=_no_sleep)
+    res = ResilientFeatureStore(ChaosFeatureStore(fs, schedule),
+                                retry=_policy(max_attempts=1),
+                                recovery_time=0.0)
+    res.get_padded_resilient(np.arange(len(x)))  # warm last-known-good
+    loader = NeighborLoader(res, gs, num_neighbors=[4], batch_size=16,
+                            labels_attr=None, on_batch_error="skip", seed=1)
+    batches = list(loader)
+    assert batches, "epoch must survive the blackout"
+    total_degraded = 0
+    for b in batches:
+        mask = np.asarray(b.extras["degraded"])
+        nid = np.asarray(b.n_id)
+        valid = nid >= 0
+        # degraded rows are exactly the valid rows homed on the dead part
+        np.testing.assert_array_equal(
+            mask[valid], part[nid[valid]] == dead)
+        assert not mask[~valid].any()
+        total_degraded += int(mask.sum())
+        # stale cache means features still equal the originals
+        np.testing.assert_allclose(
+            np.asarray(b.x)[valid], x[nid[valid]], rtol=1e-6)
+    assert loader.health["degraded_rows"] == total_degraded > 0
+
+
+@pytest.mark.chaos
+def test_hetero_loader_degraded_extras(rng):
+    from repro.data.data import HeteroData
+    from repro.data.hetero_sampler import HeteroNeighborLoader
+
+    hd = HeteroData()
+    hd.add_nodes("user", rng.standard_normal((30, 4)).astype(np.float32))
+    hd.add_nodes("item", rng.standard_normal((50, 4)).astype(np.float32))
+    hd.add_edges(("user", "buys", "item"),
+                 np.stack([rng.integers(0, 30, 200),
+                           rng.integers(0, 50, 200)]))
+    schedule = FailureSchedule(seed=4, error_rate=0.3, sleep=_no_sleep)
+    res = ResilientFeatureStore(ChaosFeatureStore(hd, schedule),
+                                retry=_policy(max_attempts=6),
+                                failure_threshold=100)
+    loader = HeteroNeighborLoader(
+        res, hd, num_neighbors={("user", "buys", "item"): [3]},
+        input_type="item", input_nodes=np.arange(50), batch_size=10,
+        labels_attr=None, on_batch_error="skip", batch_retries=2, seed=0)
+    batches = list(loader)
+    assert batches
+    for b in batches:
+        assert set(b.extras["degraded"]) == {"user", "item"}
+    assert loader.health["batches"] == len(batches)
+    assert res.health["retries"] > 0
+
+
+# ---------------------------------------------------------------------------
+# train_loop: skipped batches + health snapshot
+# ---------------------------------------------------------------------------
+
+def test_train_loop_survives_exhausted_iterator(rng):
+    from repro.train.loop import train_loop
+
+    class _FakeLoader:
+        health = {"skipped_batches": 2, "degraded_rows": 7, "batches": 3,
+                  "batch_retries": 1}
+
+    def step(state, batch):
+        return state, {"loss": jnp.asarray(batch, jnp.float32)}
+
+    batches = iter([1.0, 2.0, 3.0])  # exhausts before num_steps=10
+    logs = []
+    out = train_loop({"w": 0}, step, batches, num_steps=10, log_every=1,
+                     loader=_FakeLoader(), log_fn=logs.append)
+    assert len(out["history"]) == 3
+    assert out["loader_health"]["skipped_batches"] == 2
+    assert any("exhausted" in m for m in logs)
+    assert any("health=" in m for m in logs)
+
+
+# ---------------------------------------------------------------------------
+# THE chaos proof: jit'd training rides through faults + a blackout
+# ---------------------------------------------------------------------------
+
+@pytest.mark.chaos
+def test_chaos_train_epochs_complete_one_trace(rng):
+    """>=10% transient faults + a full partition blackout: every epoch
+    completes with zero crashes, ONE trace, and degraded/skipped counts
+    reported in loader health (the ISSUE acceptance gate)."""
+    fs, gs, part, x, y = _stores(rng, n=400, e=2400, parts=4, feat=16)
+    dead = 1
+    schedule = FailureSchedule(seed=13, error_rate=0.10,
+                               blackout={dead: [(8, 40)]}, sleep=_no_sleep)
+    res = ResilientFeatureStore(ChaosFeatureStore(fs, schedule),
+                                retry=_policy(max_attempts=3, seed=13),
+                                failure_threshold=3, recovery_time=0.0)
+    loader = NeighborLoader(res, gs, num_neighbors=[4, 3], batch_size=32,
+                            input_nodes=np.arange(256), shuffle=True,
+                            prefetch=2, on_batch_error="skip",
+                            batch_retries=2, seed=5)
+    rngp = np.random.default_rng(0)
+    params = {"w1": jnp.asarray(rngp.standard_normal((16, 8)) * 0.1,
+                                jnp.float32),
+              "w2": jnp.asarray(rngp.standard_normal((8, 3)) * 0.1,
+                                jnp.float32)}
+    traces = []
+
+    @jax.jit
+    def step(params, batch):
+        traces.append(1)
+
+        def loss_fn(p):
+            h = jax.nn.relu(batch.edge_index.matmul(batch.x @ p["w1"]))
+            out = batch.edge_index.matmul(h @ p["w2"])
+            logits = out[batch.seed_slots]
+            onehot = jax.nn.one_hot(batch.y, 3)
+            return -(jax.nn.log_softmax(logits) * onehot).sum(-1).mean()
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        return (jax.tree_util.tree_map(lambda a, g: a - 1e-2 * g, params,
+                                       grads), loss)
+
+    losses = []
+    for _ in range(3):  # 3 epochs x 8 seed batches
+        for b in loader:
+            params, loss = step(params, b)
+            losses.append(float(loss))
+    assert len(traces) == 1, "chaos must not change batch structure"
+    assert np.isfinite(losses).all()
+    assert schedule.injected["errors"] > 0
+    assert schedule.injected["blackout"] > 0
+    h = loader.health
+    assert h["batches"] == len(losses)
+    assert h["degraded_rows"] > 0  # blackout rows served stale
+    assert h["batches"] + h["skipped_batches"] >= 3 * len(loader)
+    assert res.health["breaker_trips"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# Serving: deadline-bounded degraded answers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.chaos
+def test_graph_server_degrades_under_blackout(rng):
+    from repro.launch.serve import GraphServer
+
+    fs, gs, part, x, _ = _stores(rng, n=300, e=1800, parts=4, feat=16)
+    dead = 0
+    schedule = FailureSchedule(seed=6, blackout={dead: [(1, 10_000)]},
+                               sleep=_no_sleep)
+    res = ResilientFeatureStore(ChaosFeatureStore(fs, schedule),
+                                retry=_policy(max_attempts=1),
+                                recovery_time=0.0)
+    res.get_padded_resilient(np.arange(len(x)))  # warm
+    w = jnp.asarray(np.random.default_rng(0).standard_normal((16, 4)) * 0.1,
+                    jnp.float32)
+    server = GraphServer(res, gs,
+                         lambda x_, ei_, s: (ei_.matmul(x_) @ w)[s],
+                         num_neighbors=[4, 2], batch_size=8,
+                         deadline_s=0.5, seed=0)
+    degraded_total = 0
+    for _ in range(6):
+        r = server.answer(rng.integers(0, 300, 5))
+        assert r["pred"].shape == (5, 4)
+        assert np.isfinite(r["pred"]).all()
+        degraded_total += r["degraded"]
+    assert degraded_total > 0  # partition `dead` rows served stale
+    assert server.trace_count == 1
+
+
+@pytest.mark.chaos
+def test_graph_smoke_cli_runs():
+    from repro.launch import serve
+
+    stats = serve.main(["--graph-smoke"])
+    assert stats["requests"] == 24
+    assert stats["trace_count"] == 1
+    assert stats["store_health"]["requests"] >= 24

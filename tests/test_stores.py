@@ -66,6 +66,81 @@ def test_loader_oblivious_to_partitioning(rng):
     np.testing.assert_allclose(np.asarray(a.x), np.asarray(b.x))
 
 
+def test_get_padded_single_fetch_no_double_count(rng):
+    """The dtype probe must not issue a second backend fetch: one
+    get_padded == one request, and valid rows counted exactly once."""
+    x = rng.standard_normal((20, 4)).astype(np.float32)
+    fs = PartitionedFeatureStore(num_parts=4)
+    fs.put_tensor(x)
+    fs.stats.update(local_rows=0, remote_rows=0, requests=0)
+    out = fs.get_padded(np.array([3, -1, 7, 11, -1]))
+    assert fs.stats["requests"] == 1
+    assert fs.stats["local_rows"] + fs.stats["remote_rows"] == 3
+    np.testing.assert_array_equal(out[[0, 2, 3]], x[[3, 7, 11]])
+    assert (out[[1, 4]] == 0).all()
+
+
+def test_get_padded_all_pads_on_empty_store(rng):
+    """All-invalid index: an empty fetch derives dtype/shape without
+    touching row 0 (which doesn't exist on an empty store)."""
+    fs = InMemoryFeatureStore()
+    fs.put_tensor(np.zeros((0, 5), np.float32))
+    out = fs.get_padded(np.array([-1, -1, -1]))
+    assert out.shape == (3, 5) and (out == 0).all()
+
+
+def test_put_edge_index_explicit_zero_num_nodes():
+    """num_nodes=0 is a real value (empty graph), not 'not given' — must
+    not fall through to src.max() on empty arrays."""
+    from repro.data.graph_store import InMemoryGraphStore
+
+    gs = InMemoryGraphStore()
+    gs.put_edge_index(np.zeros((2, 0), np.int64), num_nodes=0)
+    csr = gs.get_csr()
+    assert csr.num_rows == 0 and csr.num_edges == 0
+
+
+def test_partitioned_store_empty_partition_zero(rng):
+    """num_parts > num_rows leaves partition 0 potentially empty (and a
+    skewed custom route certainly does): dtype/feature-dim must come from
+    any non-empty partition."""
+    x = rng.standard_normal((3, 6)).astype(np.float32)
+    fs = PartitionedFeatureStore(num_parts=5)
+    # custom route that leaves partition 0 (and 4) empty
+    fs.put_partitioned(("node", "x"), x, np.array([1, 2, 3]))
+    assert fs.get_tensor_size(group="node", attr="x") == (3, 6)
+    np.testing.assert_array_equal(
+        fs.get_tensor(index=np.array([2, 0])), x[[2, 0]])
+
+
+def test_partitioned_stats_thread_safe_under_concurrent_get(rng):
+    """The resilient fan-out issues concurrent per-partition gets; the
+    stats counters must not lose updates (seeded, no sleeps)."""
+    import threading
+
+    x = rng.standard_normal((100, 4)).astype(np.float32)
+    fs = PartitionedFeatureStore(num_parts=4)
+    fs.put_tensor(x)
+    fs.stats.update(local_rows=0, remote_rows=0, requests=0)
+    n_threads, n_calls, n_rows = 8, 25, 40
+    idx = [rng.integers(0, 100, n_rows) for _ in range(n_threads)]
+
+    def worker(i):
+        for _ in range(n_calls):
+            np.testing.assert_allclose(fs.get_tensor(index=idx[i]),
+                                       x[idx[i]])
+
+    threads = [threading.Thread(target=worker, args=(i,))
+               for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert fs.stats["requests"] == n_threads * n_calls
+    assert (fs.stats["local_rows"] + fs.stats["remote_rows"]
+            == n_threads * n_calls * n_rows)
+
+
 def test_hetero_data_interfaces(rng):
     hd = HeteroData()
     hd.add_nodes("user", rng.standard_normal((10, 4)).astype(np.float32))
