@@ -1,0 +1,199 @@
+"""Fast-path audit cell: static proof the bench steps ride Pallas (PR 7).
+
+Re-derives the four jit'd step cells of ``spmm_bench`` at small shapes and,
+instead of timing them, *audits* them: each step's closed jaxpr is walked by
+``repro.analysis.dispatch`` (zero ``repro_oracle:*`` eqns, the expected
+kernels launched), costed by ``repro.launch.jaxpr_stats`` (pallas FLOPs),
+and its loader batches are fingerprinted by a ``RetraceSentinel`` (one
+abstract signature across batches == one compilation). Everything is an
+abstract trace — no compilation, no execution — so the cell is cheap enough
+to run on every bench invocation. Appends a ``fastpath_audit`` record
+(per-cell audit summaries + worst-case SMEM/VMEM budget headroom) to
+``BENCH_spmm.json``.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import append_cell, emit
+from repro.analysis.budgets import budget_headroom_summary
+from repro.analysis.dispatch import audit_jaxpr
+from repro.analysis.retrace import RetraceSentinel
+from repro.launch.jaxpr_stats import analyze_jaxpr
+
+
+def _audit_cell(name, step, params, batches, expect_kernels):
+    """One trace -> dispatch audit + FLOP cost + batch-signature count."""
+    jaxpr = jax.make_jaxpr(step)(params, batches[0])
+    report = audit_jaxpr(jaxpr)
+    report.assert_fused(expect_kernels=expect_kernels)
+    stats = analyze_jaxpr(jaxpr)
+
+    sentinel = RetraceSentinel(budget=1)
+    probe = sentinel.wrap(lambda p, b: None, name=name)
+    for b in batches:
+        probe(params, b)  # raises if any batch has a fresh signature
+    summary = report.summary()
+    summary["trace_count"] = sentinel.count(name)
+    summary["pallas_flops"] = int(stats["pallas_flops"])
+    emit(f"spmm/fastpath_audit/{name}",
+         float(report.total_kernel_launches),
+         f"fallbacks={report.oracle_fallbacks} "
+         f"trace_count={summary['trace_count']}")
+    return summary
+
+
+def _forced_env(value: str):
+    """Context manager flipping REPRO_USE_PALLAS around an abstract trace."""
+    import contextlib
+
+    @contextlib.contextmanager
+    def cm():
+        prev = os.environ.get("REPRO_USE_PALLAS")
+        os.environ["REPRO_USE_PALLAS"] = value
+        try:
+            yield
+        finally:
+            if prev is None:
+                os.environ.pop("REPRO_USE_PALLAS", None)
+            else:
+                os.environ["REPRO_USE_PALLAS"] = prev
+
+    return cm()
+
+
+def run(out_path: str = "BENCH_spmm.json") -> None:
+    from repro.core.edge_index import EdgeIndex
+    from repro.core.hetero import to_hetero
+    from repro.data.data import Data, HeteroData
+    from repro.data.hetero_sampler import HeteroNeighborLoader
+    from repro.data.loader import NeighborLoader
+    from repro.nn.gnn.conv import GATConv, SAGEConv, gcn_norm
+
+    on_tpu = jax.default_backend() == "tpu"
+    interpret = not on_tpu
+    rng = np.random.default_rng(23)
+    n, e, feat, hidden = 512, 4096, 32, 16
+    data = Data(x=rng.standard_normal((n, feat)).astype(np.float32),
+                edge_index=np.stack([rng.integers(0, n, e),
+                                     rng.integers(0, n, e)]),
+                y=rng.integers(0, 4, n))
+    loader = NeighborLoader(data, data, num_neighbors=[4, 2], batch_size=8,
+                            shuffle=True, prefill_ell=True, seed=0)
+    it = iter(loader)
+    batches = [next(it) for _ in range(3)]
+    audits = {}
+
+    # -- loader_step: plain 2-layer aggregation, value_and_grad ------------
+    params = {
+        "w1": jnp.asarray(rng.standard_normal((feat, hidden)) * 0.1,
+                          jnp.float32),
+        "w2": jnp.asarray(rng.standard_normal((hidden, 4)) * 0.1,
+                          jnp.float32),
+    }
+
+    def loader_step(p, batch):
+        def loss_fn(p):
+            h = jax.nn.relu(batch.edge_index.matmul(
+                batch.x @ p["w1"], force_pallas=True, interpret=interpret))
+            out = batch.edge_index.matmul(
+                h @ p["w2"], force_pallas=True, interpret=interpret)
+            return (out[batch.seed_slots] ** 2).mean()
+
+        return jax.value_and_grad(loss_fn)(p)
+
+    audits["loader_step"] = _audit_cell(
+        "loader_step", loader_step, params, batches,
+        expect_kernels=("_spmm_ell_kernel",))
+
+    # -- train_step: gcn-normalised (weighted) aggregation -----------------
+    def train_step(p, batch):
+        def loss_fn(p):
+            ew, _ = gcn_norm(batch.edge_index, batch.num_nodes,
+                             add_self_loops=False)
+            h = jax.nn.relu(batch.edge_index.matmul(
+                batch.x @ p["w1"], edge_weight=ew, force_pallas=True,
+                interpret=interpret))
+            out = batch.edge_index.matmul(
+                h @ p["w2"], edge_weight=ew, force_pallas=True,
+                interpret=interpret)
+            return (out[batch.seed_slots] ** 2).mean()
+
+        return jax.value_and_grad(loss_fn)(p)
+
+    audits["train_step"] = _audit_cell(
+        "train_step", train_step, params, batches,
+        expect_kernels=("_spmm_ell_kernel",))
+
+    # -- gat_step: fused flash-GAT attention kernel ------------------------
+    conv = GATConv(feat, hidden, heads=4)
+    gat_params = conv.init(jax.random.PRNGKey(0))
+
+    def gat_step(p, batch):
+        def loss_fn(p):
+            out = conv.apply(p, batch.x, batch.edge_index)
+            return (out[batch.seed_slots] ** 2).mean()
+
+        return jax.value_and_grad(loss_fn)(p)
+
+    with _forced_env("1"):
+        audits["gat_step"] = _audit_cell(
+            "gat_step", gat_step, gat_params, batches,
+            expect_kernels=("_gat_ell_kernel",))
+
+    # -- hetero_step: grouped per-type projections + per-relation SpMM -----
+    n_user, n_item, he = 256, 512, 2048
+    fan = {("user", "buys", "item"): [4, 2],
+           ("item", "rev_buys", "user"): [4, 2]}
+    hd = HeteroData()
+    hd.add_nodes("user", rng.standard_normal((n_user, feat)).astype(
+        np.float32))
+    hd.add_nodes("item", rng.standard_normal((n_item, feat)).astype(
+        np.float32))
+    ub = np.stack([rng.integers(0, n_user, he), rng.integers(0, n_item, he)])
+    hd.add_edges(("user", "buys", "item"), ub)
+    hd.add_edges(("item", "rev_buys", "user"), ub[::-1])
+    hloader = HeteroNeighborLoader(
+        hd, hd, num_neighbors=fan, input_type="item",
+        input_nodes=np.arange(n_item), batch_size=8, shuffle=True,
+        prefill_ell=True, seed=0)
+    hit = iter(hloader)
+    hbatches = [next(hit) for _ in range(3)]
+    net = to_hetero(lambda i, o: SAGEConv(i, o), (["user", "item"],
+                                                  list(fan)),
+                    [feat, hidden, 4], grouped=True)
+    hparams = net.init(jax.random.PRNGKey(0))
+
+    def hetero_step(p, batch):
+        def loss_fn(p):
+            out = net.apply(p, batch.x_dict, batch.edge_index_dict,
+                            batch.num_nodes_dict)
+            return (batch.seed_output(out) ** 2).mean()
+
+        return jax.value_and_grad(loss_fn)(p)
+
+    with _forced_env("1"):
+        audits["hetero_step"] = _audit_cell(
+            "hetero_step", hetero_step, hparams, hbatches,
+            expect_kernels=("_spmm_ell_kernel", "_gmm_kernel"))
+
+    headroom = budget_headroom_summary(feat=feat)
+    rec = {
+        "cell": "fastpath_audit",
+        "backend": jax.default_backend(),
+        "audits": audits,
+        "budget_headroom": headroom,
+    }
+    emit("spmm/fastpath_audit/min_smem_headroom_bytes",
+         float(headroom["min_smem_headroom_bytes"]),
+         f"launches_audited={headroom['launches_audited']}")
+    append_cell(out_path, rec)
+
+
+if __name__ == "__main__":
+    run()

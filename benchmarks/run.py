@@ -14,8 +14,9 @@ import traceback
 
 def main() -> None:
     from benchmarks import (chaos_recovery, explainer_fidelity,
-                            grouped_matmul_bench, sampler_throughput,
-                            spmm_bench, store_scaling, table12_compile_trim)
+                            fastpath_audit, grouped_matmul_bench,
+                            sampler_throughput, spmm_bench, store_scaling,
+                            table12_compile_trim)
 
     suites = [
         ("table12_compile_trim", table12_compile_trim.run),
@@ -27,6 +28,7 @@ def main() -> None:
         ("spmm_train_step", spmm_bench.run_train_step),
         ("spmm_hetero_step", spmm_bench.run_hetero_step),
         ("spmm_gat_step", spmm_bench.run_gat_step),
+        ("fastpath_audit", fastpath_audit.run),
         ("explainer_fidelity", explainer_fidelity.run),
         ("chaos_recovery", chaos_recovery.run),
     ]

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import append_cell, emit, time_fn
+from repro.analysis.retrace import RetraceSentinel
 from repro.kernels.spmm import ops as spmm_ops, ref as spmm_ref
 
 # (rows, K, F) cells. K is the padded neighbor budget per row.
@@ -142,18 +143,20 @@ def run_loader_step(out_path: str = "BENCH_spmm.json") -> None:
         "w2": jnp.asarray(rng.standard_normal((hidden, 4)) * 0.1,
                           jnp.float32),
     }
-    traces = []
+    # The sentinel replaces the hand-rolled in-trace counter: a batch whose
+    # shapes force a second compilation raises with a signature diff.
+    sentinel = RetraceSentinel(budget=1)
 
     @jax.jit
     def step_cached(params, batch):
-        traces.append(1)  # trace counter: must stay at 1 across batches
-
         def loss_fn(p):
             h = jax.nn.relu(batch.edge_index.matmul(batch.x @ p["w1"]))
             out = batch.edge_index.matmul(h @ p["w2"])
             return (out[batch.seed_slots] ** 2).mean()
 
         return jax.value_and_grad(loss_fn)(params)
+
+    step_cached = sentinel.wrap(step_cached, name="loader_step")
 
     @functools.partial(jax.jit, static_argnums=(4,))
     def step_raw(params, x, edge_data, seed_slots, num_nodes):
@@ -191,7 +194,7 @@ def run_loader_step(out_path: str = "BENCH_spmm.json") -> None:
     raw_us = time_over_batches(
         lambda b: step_raw(params, b.x, b.edge_index.data, b.seed_slots,
                            b.num_nodes))
-    assert len(traces) == 1, f"recompiled across batches: {len(traces)}"
+    sentinel.check()  # 1 signature across all batches, or raise with a diff
 
     # loader -> Pallas dispatch proof on a tiny forced-interpret cell
     small = NeighborLoader(data, data, num_neighbors=[4, 2], batch_size=8,
@@ -214,7 +217,7 @@ def run_loader_step(out_path: str = "BENCH_spmm.json") -> None:
         "make_batch_us": make_batch_us,
         "step_cached_us": cached_us,
         "step_raw_us": raw_us,
-        "trace_count": len(traces),
+        "trace_count": sentinel.count("loader_step"),
         key: time_fn(pallas_step, sb, warmup=1, iters=3),
     }
     emit("spmm/loader_step/cached_us", cached_us,
@@ -260,15 +263,13 @@ def run_train_step(out_path: str = "BENCH_spmm.json") -> None:
         "w2": jnp.asarray(rng.standard_normal((hidden, 4)) * 0.1,
                           jnp.float32),
     }
-    traces = {"oracle": [], "kernel": []}
+    sentinel = RetraceSentinel(budget=1)
 
     def make_step(force_pallas: bool, tag: str):
         interpret = None if not force_pallas else (not on_tpu)
 
         @jax.jit
         def step(params, batch):
-            traces[tag].append(1)  # trace counter: must stay at 1
-
             def loss_fn(p):
                 ew, _ = gcn_norm(batch.edge_index, batch.num_nodes,
                                  add_self_loops=False)
@@ -282,7 +283,7 @@ def run_train_step(out_path: str = "BENCH_spmm.json") -> None:
 
             return jax.value_and_grad(loss_fn)(params)
 
-        return step
+        return sentinel.wrap(step, name=tag)
 
     step_oracle = make_step(False, "oracle")
     step_kernel = make_step(True, "kernel")
@@ -307,8 +308,7 @@ def run_train_step(out_path: str = "BENCH_spmm.json") -> None:
 
     oracle_us = time_over_batches(step_oracle)
     kernel_us = time_over_batches(step_kernel)
-    assert len(traces["oracle"]) == 1 and len(traces["kernel"]) == 1, \
-        f"recompiled across batches: {traces}"
+    sentinel.check()  # 1 signature per step fn, or raise with a diff
 
     key = "step_grad_kernel_us" if on_tpu else "step_grad_kernel_interpret_us"
     rec = {
@@ -318,8 +318,8 @@ def run_train_step(out_path: str = "BENCH_spmm.json") -> None:
         "batch_size": batch_size, "fanouts": fanouts,
         "step_grad_oracle_us": oracle_us,
         key: kernel_us,
-        "trace_count_oracle": len(traces["oracle"]),
-        "trace_count_kernel": len(traces["kernel"]),
+        "trace_count_oracle": sentinel.count("oracle"),
+        "trace_count_kernel": sentinel.count("kernel"),
         "grad_max_abs_diff": max_diff,
     }
     emit("spmm/train_step/grad_oracle_us", oracle_us)
@@ -375,14 +375,11 @@ def run_hetero_step(out_path: str = "BENCH_spmm.json") -> None:
     net_sep = to_hetero(lambda i, o: SAGEConv(i, o), metadata,
                         [feat, hidden, 4], grouped=False)
     params = net.init(jax.random.PRNGKey(0))
-    traces = []
+    sentinel = RetraceSentinel(budget=1)
 
-    def make_step(model, counter=None):
+    def make_step(model, name=None):
         @jax.jit
         def step(params, batch):
-            if counter is not None:
-                counter.append(1)  # trace counter: must stay at 1
-
             def loss_fn(p):
                 out = model.apply(p, batch.x_dict, batch.edge_index_dict,
                                   batch.num_nodes_dict)
@@ -390,9 +387,9 @@ def run_hetero_step(out_path: str = "BENCH_spmm.json") -> None:
 
             return jax.value_and_grad(loss_fn)(params)
 
-        return step
+        return step if name is None else sentinel.wrap(step, name=name)
 
-    step_grouped = make_step(net, traces)
+    step_grouped = make_step(net, "hetero_step")
     step_sep = make_step(net_sep)
 
     t0 = time.perf_counter()
@@ -412,7 +409,7 @@ def run_hetero_step(out_path: str = "BENCH_spmm.json") -> None:
 
     grouped_us = time_over_batches(step_grouped)
     sep_us = time_over_batches(step_sep)
-    assert len(traces) == 1, f"recompiled across batches: {len(traces)}"
+    sentinel.check()  # 1 signature across all batches, or raise with a diff
 
     # every relation's aggregation -> Pallas ELL kernel, proven on a tiny
     # forced-interpret cell (compiled on real TPUs)
@@ -441,7 +438,7 @@ def run_hetero_step(out_path: str = "BENCH_spmm.json") -> None:
         "make_batch_us": make_batch_us,
         "step_grouped_us": grouped_us,
         "step_separate_us": sep_us,
-        "trace_count": len(traces),
+        "trace_count": sentinel.count("hetero_step"),
         key: pallas_us,
     }
     emit("spmm/hetero_step/grouped_us", grouped_us,
@@ -483,15 +480,13 @@ def run_gat_step(out_path: str = "BENCH_spmm.json") -> None:
                             prefill_ell=True, seed=0)
     conv = GATConv(feat, hidden, heads=heads)
     params = conv.init(jax.random.PRNGKey(0))
-    traces = {"oracle": [], "kernel": []}
+    sentinel = RetraceSentinel(budget=1)
 
     # GATConv dispatches through use_pallas(); flip the env var around each
     # variant's trace — the compiled artifacts keep their path afterwards.
     def make_step(use_pallas_env: str, tag: str):
         @jax.jit
         def step(params, batch):
-            traces[tag].append(1)  # trace counter: must stay at 1
-
             def loss_fn(p):
                 ei = (batch.edge_index if use_pallas_env == "1" else
                       EdgeIndex(batch.edge_index.data, batch.num_nodes,
@@ -501,7 +496,7 @@ def run_gat_step(out_path: str = "BENCH_spmm.json") -> None:
 
             return jax.value_and_grad(loss_fn)(params)
 
-        return step
+        return sentinel.wrap(step, name=tag)
 
     it = iter(loader)
     batches = [next(it) for _ in range(4)]
@@ -534,8 +529,7 @@ def run_gat_step(out_path: str = "BENCH_spmm.json") -> None:
 
     oracle_us = time_over_batches(step_oracle)
     kernel_us = time_over_batches(step_kernel)
-    assert len(traces["oracle"]) == 1 and len(traces["kernel"]) == 1, \
-        f"recompiled across batches: {traces}"
+    sentinel.check()  # 1 signature per step fn, or raise with a diff
 
     key = "step_grad_kernel_us" if on_tpu else "step_grad_kernel_interpret_us"
     rec = {
@@ -545,8 +539,8 @@ def run_gat_step(out_path: str = "BENCH_spmm.json") -> None:
         "batch_size": batch_size, "fanouts": fanouts,
         "step_grad_oracle_us": oracle_us,
         key: kernel_us,
-        "trace_count_oracle": len(traces["oracle"]),
-        "trace_count_kernel": len(traces["kernel"]),
+        "trace_count_oracle": sentinel.count("oracle"),
+        "trace_count_kernel": sentinel.count("kernel"),
         "grad_max_abs_diff": max_diff,
     }
     emit("spmm/gat_step/grad_oracle_us", oracle_us)

@@ -1,0 +1,30 @@
+"""Static verification for the Pallas GNN stack (PR 7).
+
+Four passes, one import surface:
+
+  * :mod:`repro.analysis.dispatch` — jaxpr dispatch auditing
+    (``audit_report(fn, *args).assert_fused()``);
+  * :mod:`repro.analysis.budgets` — SMEM/VMEM accounting of kernel layouts
+    vs the declared per-core budgets in :mod:`repro.kernels.budgets`;
+  * :mod:`repro.analysis.retrace` — recompilation sentinels with
+    signature diffs (``RetraceSentinel``);
+  * :mod:`repro.analysis.lint` — AST rules + pytree round-trip checks
+    (``python -m repro.analysis`` runs them over ``src/``).
+"""
+
+from repro.analysis.budgets import (BudgetError, budget_headroom_summary,
+                                    ell_layout_report, gat_grid_report,
+                                    gmm_tiling_report)
+from repro.analysis.dispatch import (DispatchReport, audit_jaxpr,
+                                     audit_report)
+from repro.analysis.lint import (Finding, check_pytree_roundtrips,
+                                 lint_source, lint_tree, run_all)
+from repro.analysis.retrace import (RetraceError, RetraceSentinel,
+                                    cache_size)
+
+__all__ = [
+    "BudgetError", "budget_headroom_summary", "ell_layout_report",
+    "gat_grid_report", "gmm_tiling_report", "DispatchReport", "audit_jaxpr",
+    "audit_report", "Finding", "check_pytree_roundtrips", "lint_source",
+    "lint_tree", "run_all", "RetraceError", "RetraceSentinel", "cache_size",
+]

@@ -1,0 +1,48 @@
+"""``python -m repro.analysis [--root PATH]`` — run the static lint gate.
+
+Runs the AST rules over every ``.py`` under ``--root`` (default: the
+``src/`` tree this package was imported from) plus the dynamic pytree
+round-trip checks. Prints findings one per line and exits 1 on any; exits
+0 clean — the tier-1 test ``test_static_analysis.py::test_lint_clean``
+enforces the clean exit.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from repro.analysis import lint
+
+
+def default_root() -> str:
+    # src/repro/analysis/__main__.py -> src/
+    return os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis")
+    ap.add_argument("--root", default=default_root(),
+                    help="directory tree to lint (default: the src/ tree)")
+    ap.add_argument("--no-pytree", action="store_true",
+                    help="skip the dynamic pytree round-trip checks")
+    args = ap.parse_args(argv)
+
+    findings = lint.lint_tree(args.root)
+    if not args.no_pytree:
+        findings += lint.check_pytree_roundtrips()
+    for f in findings:
+        print(f)
+    n_rules = 3 + (0 if args.no_pytree else 1)
+    if findings:
+        print(f"FAILED: {len(findings)} finding(s) across {n_rules} passes",
+              file=sys.stderr)
+        return 1
+    print(f"OK: {n_rules} passes clean over {args.root}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

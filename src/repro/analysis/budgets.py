@@ -1,0 +1,119 @@
+"""Kernel budget linter: static SMEM/VMEM accounting vs declared budgets.
+
+Builds headroom reports on top of the cost models in
+``repro.kernels.budgets`` (the constants + validators the packers call at
+cache-pack time). This module is the *analysis* face: given an ELL layout,
+a flash-GAT grid, or a grouped-matmul tiling, report per-launch memory use
+against the per-core budgets — and raise the same actionable
+:class:`BudgetError` the producer-thread validators do.
+
+The split keeps layering clean: kernels never import ``repro.analysis``;
+the pack-time checks live next to the constants in ``kernels.budgets``,
+while the reporting/linting API (and the benchmark's ``budget_headroom``
+summaries) live here.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.kernels import budgets as hw
+from repro.kernels.budgets import BudgetError  # noqa: F401  re-export
+
+
+def _headroom(usage: Dict[str, int]) -> Dict[str, float]:
+    return {
+        "smem_frac": usage["smem_bytes"] / hw.SMEM_BYTES_PER_CORE,
+        "vmem_frac": usage["vmem_bytes"] / hw.VMEM_BYTES_PER_CORE,
+        "smem_headroom_bytes": hw.SMEM_BYTES_PER_CORE - usage["smem_bytes"],
+        "vmem_headroom_bytes": hw.VMEM_BYTES_PER_CORE - usage["vmem_bytes"],
+    }
+
+
+def ell_layout_report(layout: Sequence[Tuple[np.ndarray, int]], *,
+                      feat: int = hw.DEFAULT_BF,
+                      block_rows: int = hw.DEFAULT_BR,
+                      weighted: bool = False,
+                      strict: bool = True) -> List[Dict[str, Any]]:
+    """Per-rung launch accounting of a static ELL layout.
+
+    With ``strict=True`` (default) an over-budget rung raises
+    :class:`BudgetError`; with ``strict=False`` the rung is reported with
+    ``over_budget=True`` instead (the lint-report mode).
+    """
+    out = []
+    for rows, k in layout:
+        k = int(k)
+        usage = hw.ell_launch_usage(len(rows), k, feat,
+                                    block_rows=block_rows, weighted=weighted)
+        rec = {"rows": int(len(rows)), "k": k, "feat": feat, **usage,
+               **_headroom(usage)}
+        rec["over_budget"] = (usage["smem_bytes"] > hw.SMEM_BYTES_PER_CORE
+                              or usage["vmem_bytes"] > hw.VMEM_BYTES_PER_CORE
+                              or block_rows * k > hw.MAX_PREFETCH_ELEMS)
+        if strict and rec["over_budget"]:
+            hw.check_ell_rung(k, block_rows=block_rows,
+                              context="ell_layout_report")
+            raise BudgetError(
+                f"ell_layout_report: K={k} rung over budget: "
+                f"smem={usage['smem_bytes']}B vmem={usage['vmem_bytes']}B")
+        out.append(rec)
+    return out
+
+
+def gat_grid_report(rows: int, k: int, heads: int, feat: int, *,
+                    block_rows: int = hw.DEFAULT_BR,
+                    weighted: bool = False) -> Dict[str, Any]:
+    """One flash-GAT bucket's launch accounting (strict)."""
+    hw.check_gat_bucket(rows, k, heads, feat, block_rows=block_rows,
+                        weighted=weighted)
+    usage = hw.gat_launch_usage(rows, k, heads, feat,
+                                block_rows=block_rows, weighted=weighted)
+    return {"rows": rows, "k": k, "heads": heads, "feat": feat, **usage,
+            **_headroom(usage)}
+
+
+def gmm_tiling_report(k_dim: int, *, block: Tuple[int, int, int] = hw.GMM_BLOCK
+                      ) -> Dict[str, Any]:
+    """Grouped-matmul grid-step accounting (the MXU tile working set)."""
+    usage = hw.gmm_launch_usage(k_dim, block=block)
+    if usage["vmem_bytes"] > hw.VMEM_BYTES_PER_CORE:
+        raise BudgetError(
+            f"grouped-matmul tiling {block}: {usage['vmem_bytes']} VMEM "
+            f"bytes per grid step exceeds the per-core budget of "
+            f"{hw.VMEM_BYTES_PER_CORE}. Shrink the MXU block shape.")
+    return {"block": tuple(block), **usage, **_headroom(usage)}
+
+
+def budget_headroom_summary(layouts: Optional[Sequence[
+        Sequence[Tuple[np.ndarray, int]]]] = None, *,
+        feat: int = hw.DEFAULT_BF, heads: int = 4) -> Dict[str, float]:
+    """Worst-case headroom across layouts (the benchmark cell payload).
+
+    With no layouts given, reports the default-constant working point: one
+    max-chunk SpMM launch and a matching flash-GAT launch at ``DEFAULT_BR``
+    / ``DEFAULT_BF``, plus the grouped-matmul tile set.
+    """
+    recs: List[Dict[str, Any]] = []
+    if layouts:
+        for layout in layouts:
+            recs.extend(ell_layout_report(layout, feat=feat))
+    else:
+        max_k = hw.MAX_PREFETCH_ELEMS // hw.DEFAULT_BR
+        usage = hw.ell_launch_usage(hw.DEFAULT_BR, max_k, feat)
+        recs.append({**usage, **_headroom(usage)})
+    gat = hw.gat_launch_usage(hw.DEFAULT_BR, hw.DEFAULT_BR * 2, heads, feat)
+    recs.append({**gat, **_headroom(gat)})
+    gmm = hw.gmm_launch_usage(feat)
+    recs.append({**gmm, **_headroom(gmm)})
+    return {
+        "min_smem_headroom_bytes": min(r["smem_headroom_bytes"]
+                                       for r in recs),
+        "min_vmem_headroom_bytes": min(r["vmem_headroom_bytes"]
+                                       for r in recs),
+        "max_smem_frac": max(r["smem_frac"] for r in recs),
+        "max_vmem_frac": max(r["vmem_frac"] for r in recs),
+        "launches_audited": len(recs),
+    }

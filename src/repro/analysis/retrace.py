@@ -1,0 +1,155 @@
+"""Retrace sentinel: fail fast (and explain) when a jit entry recompiles.
+
+Every "single trace across batches" invariant in this repo used to be a
+hand-rolled ``traces.append(1)`` inside the traced body. The sentinel makes
+it a reusable instrument: wrap a jit'd entry point, and every call records
+its *abstract signature* — the args' pytree structure plus each leaf's
+``(shape, dtype)`` (or the static value for non-array leaves). Distinct
+signatures are exactly what forces a fresh jit compilation, so exceeding a
+declared budget raises :class:`RetraceError` *with a leaf-level diff* of
+the offending avals/static aux against the previous signature — instead of
+a silent recompile (or an opaque counter assert).
+
+Usage::
+
+    with RetraceSentinel(budget=1) as sentinel:
+        step = sentinel.wrap(jax.jit(step), name="train_step")
+        for batch in batches:
+            step(params, batch)        # raises on a 2nd distinct signature
+    sentinel.count("train_step")       # -> 1
+
+``watch(jitted_fn)`` is the non-wrapping variant for functions called
+elsewhere: it snapshots ``_cache_size()`` on entry and verifies the delta
+on exit.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+
+
+class RetraceError(RuntimeError):
+    """A jit entry point exceeded its declared recompilation budget."""
+
+
+def _leaf_sig(leaf) -> Tuple[str, ...]:
+    if hasattr(leaf, "shape") and hasattr(leaf, "dtype"):
+        return ("aval", str(tuple(leaf.shape)), str(leaf.dtype))
+    return ("static", repr(leaf))
+
+
+def _signature(args: tuple, kwargs: dict) -> Tuple[Any, ...]:
+    leaves, treedef = jax.tree_util.tree_flatten((args, kwargs))
+    return (str(treedef),) + tuple(_leaf_sig(l) for l in leaves)
+
+
+def _diff(old: Tuple, new: Tuple) -> str:
+    lines: List[str] = []
+    if old[0] != new[0]:
+        lines.append(f"  pytree structure changed:\n    was {old[0]}\n"
+                     f"    now {new[0]}")
+    for i, (a, b) in enumerate(zip(old[1:], new[1:])):
+        if a != b:
+            lines.append(f"  leaf[{i}]: {' '.join(a)} -> {' '.join(b)}")
+    if len(old) != len(new):
+        lines.append(f"  leaf count: {len(old) - 1} -> {len(new) - 1}")
+    return "\n".join(lines) or "  (signatures differ only in ordering)"
+
+
+def cache_size(jitted) -> Optional[int]:
+    """Compiled-variant count of a ``jax.jit``-ed callable, if exposed."""
+    probe = getattr(jitted, "_cache_size", None)
+    try:
+        return int(probe()) if callable(probe) else None
+    except Exception:
+        return None
+
+
+class RetraceSentinel:
+    """Records (fn, abstract-signature) keys; raises beyond the budget.
+
+    ``budget`` is the number of *distinct signatures* (== compilations)
+    each instrumented entry point may accumulate; ``None`` disables
+    enforcement but keeps recording (the serving-path mode: never crash,
+    still report).
+    """
+
+    def __init__(self, budget: Optional[int] = 1):
+        self.budget = math.inf if budget is None else int(budget)
+        self._signatures: Dict[str, List[Tuple]] = {}
+        self._watched: List[Tuple[str, Any, int]] = []
+
+    # ------------------------------------------------------------- wrapping
+    def wrap(self, fn: Callable, name: Optional[str] = None) -> Callable:
+        """Instrument ``fn``: every call records its abstract signature."""
+        key = name or getattr(fn, "__name__", repr(fn))
+        self._signatures.setdefault(key, [])
+
+        def wrapped(*args, **kwargs):
+            self._record(key, _signature(args, kwargs))
+            return fn(*args, **kwargs)
+
+        wrapped.__name__ = f"sentinel({key})"
+        wrapped.__wrapped__ = fn
+        return wrapped
+
+    def _record(self, key: str, sig: Tuple) -> None:
+        seen = self._signatures[key]
+        if sig in seen:
+            return
+        seen.append(sig)
+        if len(seen) > self.budget:
+            detail = ("\n" + _diff(seen[-2], sig)) if len(seen) >= 2 else ""
+            raise RetraceError(
+                f"{key}: retrace budget exceeded — {len(seen)} distinct "
+                f"abstract signatures (budget {self.budget})."
+                + (" Offending signature diff vs the previous one:" + detail
+                   if detail else ""))
+
+    # ------------------------------------------------------------- watching
+    def watch(self, jitted, name: Optional[str] = None) -> None:
+        """Track an already-jitted fn's compile cache without wrapping it."""
+        key = name or getattr(jitted, "__name__", repr(jitted))
+        base = cache_size(jitted)
+        if base is None:
+            raise ValueError(f"{key}: object exposes no _cache_size(); "
+                             f"use wrap() instead")
+        self._watched.append((key, jitted, base))
+
+    # ------------------------------------------------------------ reporting
+    def count(self, name: str) -> int:
+        """Distinct signatures recorded for one instrumented entry point."""
+        return len(self._signatures.get(name, ()))
+
+    @property
+    def counts(self) -> Dict[str, int]:
+        out = {k: len(v) for k, v in self._signatures.items()}
+        for key, jitted, base in self._watched:
+            out[key] = (cache_size(jitted) or base) - base
+        return out
+
+    @property
+    def total(self) -> int:
+        return sum(self.counts.values())
+
+    def check(self) -> None:
+        """Verify every instrumented/watched entry is within budget."""
+        for key, n in self.counts.items():
+            if n > self.budget:
+                sigs = self._signatures.get(key)
+                detail = ("\n" + _diff(sigs[-2], sigs[-1])) if sigs and \
+                    len(sigs) >= 2 else ""
+                raise RetraceError(
+                    f"{key}: {n} compilations exceed the retrace budget "
+                    f"of {self.budget}{detail}")
+
+    # -------------------------------------------------------- context mgmt
+    def __enter__(self) -> "RetraceSentinel":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is None:
+            self.check()

@@ -35,8 +35,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-DEFAULT_BR = 8
-DEFAULT_BF = 128
+from repro.kernels.budgets import DEFAULT_BF, DEFAULT_BR
 _NUM_SLOTS = 2  # double buffering
 
 

@@ -32,16 +32,17 @@ def gat_attend_coo(send: jnp.ndarray, recv: jnp.ndarray,
     renormalisation); ``message_callback`` observes the flattened
     ``(E, H*F)`` messages (the explainer's c(.) hook).
     """
-    logits = a_send[send] + a_recv[recv]                    # (E, H)
-    logits = jax.nn.leaky_relu(logits, negative_slope)
-    alpha = softmax_ref.segment_softmax(logits, recv, num_rows)
-    msg = z_send[send] * alpha[..., None]                   # (E, H, F)
-    if edge_weight is not None:
-        msg = msg * edge_weight[:, None, None].astype(msg.dtype)
-    if message_callback is not None:
-        msg = message_callback(msg.reshape(msg.shape[0], -1)).reshape(
-            msg.shape)
-    out = jax.ops.segment_sum(msg, recv, num_segments=num_rows)
+    with jax.named_scope("repro_oracle:gat_attend_coo"):
+        logits = a_send[send] + a_recv[recv]                # (E, H)
+        logits = jax.nn.leaky_relu(logits, negative_slope)
+        alpha = softmax_ref.segment_softmax(logits, recv, num_rows)
+        msg = z_send[send] * alpha[..., None]               # (E, H, F)
+        if edge_weight is not None:
+            msg = msg * edge_weight[:, None, None].astype(msg.dtype)
+        if message_callback is not None:
+            msg = message_callback(msg.reshape(msg.shape[0], -1)).reshape(
+                msg.shape)
+        out = jax.ops.segment_sum(msg, recv, num_segments=num_rows)
     return out, alpha
 
 
@@ -76,11 +77,17 @@ def gat_attend_panels(ell_idx: jnp.ndarray, adst: jnp.ndarray,
     ``z`` is (N, H, F); ``ell_w`` optional (R, K) post-softmax per-slot
     weights (the explainer mask / edge weight — applied to the numerator
     only, no renormalisation, matching the materialised path).
+
+    Scoped ``repro_oracle`` for the dispatch auditor: this is the panel
+    fallback of ``gat_attend_ell``. (The kernel's own backward recomputes
+    the softmax via ``gat_softmax_panels`` directly — inside a
+    ``repro_kernel_vjp`` scope, which takes classification precedence.)
     """
-    p = gat_softmax_panels(ell_idx, adst, alpha_src,
-                           negative_slope=negative_slope)
-    if ell_w is not None:
-        p = p * ell_w[..., None]
-    zg = z[jnp.maximum(ell_idx, 0)]                     # (R, K, H, F)
-    return jnp.einsum("rkh,rkhf->rhf", p.astype(jnp.float32),
-                      zg.astype(jnp.float32)).astype(z.dtype)
+    with jax.named_scope("repro_oracle:gat_attend_panels"):
+        p = gat_softmax_panels(ell_idx, adst, alpha_src,
+                               negative_slope=negative_slope)
+        if ell_w is not None:
+            p = p * ell_w[..., None]
+        zg = z[jnp.maximum(ell_idx, 0)]                 # (R, K, H, F)
+        return jnp.einsum("rkh,rkhf->rhf", p.astype(jnp.float32),
+                          zg.astype(jnp.float32)).astype(z.dtype)

@@ -1,0 +1,168 @@
+"""Hardware budget constants + static per-launch memory accounting.
+
+The single source of truth for the SMEM/VMEM assumptions the Pallas kernels
+bake into their grids (previously duplicated across ``kernels/spmm/ops.py``
+and ``kernels/attention/ops.py``). Two layers:
+
+  * constants — prefetch-table cap, default block shapes, declared per-core
+    SMEM/VMEM budgets, double-buffer depth;
+  * accounting — pure-Python cost models of one kernel launch
+    (``ell_launch_usage`` / ``gat_launch_usage`` / ``gmm_launch_usage``) and
+    the pack-time validators (``check_ell_rung`` / ``check_ell_layout`` /
+    ``check_gat_bucket``) that raise :class:`BudgetError` *before* a layout
+    that cannot launch reaches a kernel — on the loader's producer thread,
+    not inside a trace.
+
+``analysis.budgets`` builds its headroom reports on top of these models;
+keeping them here (below the kernels) avoids a kernels -> analysis import
+cycle. Everything is host-side numpy/ints: safe to call from packers.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Sequence, Tuple
+
+import numpy as np
+
+# --------------------------------------------------------------- constants
+# The neighbor table rides scalar prefetch into SMEM on real TPUs, which is
+# KB-scale: bound the per-launch table and chunk the row dimension above it.
+# 64k int32 = 256 KB per launch; shapes are host-known so the chunk loop is
+# a static Python loop (one pallas_call per chunk, shared compiled kernel
+# across equal-shaped chunks).
+MAX_PREFETCH_ELEMS = 64 * 1024
+
+# Declared per-core budgets (TPU v4-class; conservative so CPU interpret
+# runs enforce the same discipline the hardware would).
+SMEM_BYTES_PER_CORE = 512 * 1024
+VMEM_BYTES_PER_CORE = 16 * 1024 * 1024
+
+# Default kernel block shapes: BR rows per grid step, BF feature lanes.
+DEFAULT_BR = 8
+DEFAULT_BF = 128
+# Grouped-matmul MXU tiles (M, N, K).
+GMM_BLOCK = (128, 128, 128)
+# Gather scratch double-buffering depth (DMA slot count) in the ELL kernels.
+DOUBLE_BUFFER_SLOTS = 2
+
+_I32 = 4  # prefetch tables are int32
+
+
+class BudgetError(ValueError):
+    """A static layout/tiling exceeds a declared per-core memory budget.
+
+    Subclasses ``ValueError`` so existing "bad layout" handling keeps
+    working; raised at pack time (host side) with an actionable message —
+    which rung/grid is over, by how much, and what to shrink.
+    """
+
+
+# -------------------------------------------------------------- accounting
+def ell_chunk_rows(k: int, block_rows: int = DEFAULT_BR,
+                   max_prefetch: int = MAX_PREFETCH_ELEMS) -> int:
+    """Rows per launch after SMEM chunking (the ops-layer chunk rule)."""
+    chunk = max(max_prefetch // max(k, 1), block_rows)
+    return chunk - chunk % block_rows
+
+
+def ell_launch_usage(rows: int, k: int, feat: int, *,
+                     block_rows: int = DEFAULT_BR,
+                     block_feat: int = DEFAULT_BF,
+                     dtype_bytes: int = 4,
+                     weighted: bool = False) -> Dict[str, int]:
+    """Static SMEM/VMEM bytes of one (chunked) SpMM ELL launch."""
+    launch_rows = min(rows, ell_chunk_rows(k, block_rows))
+    bf = block_feat if feat % block_feat == 0 else feat
+    smem = launch_rows * k * _I32                      # prefetched table
+    vmem = (DOUBLE_BUFFER_SLOTS * block_rows * bf * dtype_bytes  # gather buf
+            + block_rows * bf * dtype_bytes)                     # out block
+    if weighted:
+        vmem += block_rows * k * dtype_bytes                     # weights
+    return {"smem_bytes": smem, "vmem_bytes": vmem,
+            "launch_rows": launch_rows, "block_feat": bf}
+
+
+def gat_launch_usage(rows: int, k: int, heads: int, feat: int, *,
+                     block_rows: int = DEFAULT_BR,
+                     block_feat: int = DEFAULT_BF,
+                     dtype_bytes: int = 4,
+                     weighted: bool = False) -> Dict[str, int]:
+    """Static SMEM/VMEM bytes of one (chunked) flash-GAT launch."""
+    launch_rows = min(rows, ell_chunk_rows(k, block_rows))
+    bf = block_feat if feat % block_feat == 0 else feat
+    smem = launch_rows * k * _I32
+    vmem = (DOUBLE_BUFFER_SLOTS * block_rows * bf * dtype_bytes   # z gather
+            + DOUBLE_BUFFER_SLOTS * block_rows * heads * dtype_bytes  # alpha
+            + block_rows * bf * dtype_bytes                       # out block
+            + block_rows * heads * dtype_bytes)                   # adst block
+    if weighted:
+        vmem += block_rows * k * dtype_bytes
+    return {"smem_bytes": smem, "vmem_bytes": vmem,
+            "launch_rows": launch_rows, "block_feat": bf}
+
+
+def gmm_launch_usage(k_dim: int, *, block: Tuple[int, int, int] = GMM_BLOCK,
+                     dtype_bytes: int = 4) -> Dict[str, int]:
+    """Static VMEM bytes of one grouped-matmul grid step (x/w/acc tiles)."""
+    bm, bn, bk = block
+    vmem = (bm * bk + bk * bn) * dtype_bytes + bm * bn * 4  # acc is f32
+    return {"smem_bytes": 0, "vmem_bytes": vmem, "k_dim": k_dim}
+
+
+# --------------------------------------------------------------- validators
+def check_ell_rung(k: int, *, block_rows: int = DEFAULT_BR,
+                   context: str = "ELL layout") -> None:
+    """Reject a K rung whose *minimum* launch cannot fit the budgets.
+
+    The chunker floors at one ``block_rows`` row block per launch, so a rung
+    with ``block_rows * K`` table elements above ``MAX_PREFETCH_ELEMS`` (or
+    its bytes above SMEM) can never be split small enough — fail at pack
+    time instead of OOMing a launch.
+    """
+    min_table = block_rows * k
+    if min_table > MAX_PREFETCH_ELEMS:
+        raise BudgetError(
+            f"{context}: K={k} rung needs a {min_table}-element prefetch "
+            f"table even at one {block_rows}-row block per launch, over the "
+            f"MAX_PREFETCH_ELEMS={MAX_PREFETCH_ELEMS} SMEM cap "
+            f"(max K at block_rows={block_rows} is "
+            f"{MAX_PREFETCH_ELEMS // block_rows}). Lower the degree bound "
+            f"(sampler fanout) or split the range across buckets.")
+    if min_table * _I32 > SMEM_BYTES_PER_CORE:
+        raise BudgetError(
+            f"{context}: K={k} rung's minimum prefetch table is "
+            f"{min_table * _I32} bytes, over the per-core SMEM budget of "
+            f"{SMEM_BYTES_PER_CORE} bytes. Lower the degree bound or "
+            f"shrink block_rows.")
+
+
+def check_ell_layout(layout: Sequence[Tuple[np.ndarray, int]], *,
+                     block_rows: int = DEFAULT_BR,
+                     feat: int = DEFAULT_BF,
+                     context: str = "ELL layout") -> None:
+    """Validate every rung of a static bucket layout against the budgets."""
+    for rows, k in layout:
+        check_ell_rung(int(k), block_rows=block_rows,
+                       context=f"{context} (bucket of {len(rows)} rows)")
+        usage = ell_launch_usage(len(rows), int(k), feat,
+                                 block_rows=block_rows)
+        if usage["vmem_bytes"] > VMEM_BYTES_PER_CORE:
+            raise BudgetError(
+                f"{context}: K={k} bucket needs {usage['vmem_bytes']} VMEM "
+                f"bytes per launch, over the per-core budget of "
+                f"{VMEM_BYTES_PER_CORE}. Shrink block_feat or block_rows.")
+
+
+def check_gat_bucket(rows: int, k: int, heads: int, feat: int, *,
+                     block_rows: int = DEFAULT_BR,
+                     weighted: bool = False) -> None:
+    """Validate one flash-GAT bucket's grid against the budgets."""
+    check_ell_rung(k, block_rows=block_rows, context="flash-GAT bucket")
+    usage = gat_launch_usage(rows, k, heads, feat, block_rows=block_rows,
+                             weighted=weighted)
+    if usage["vmem_bytes"] > VMEM_BYTES_PER_CORE:
+        raise BudgetError(
+            f"flash-GAT bucket (rows={rows}, K={k}, heads={heads}, "
+            f"feat={feat}): {usage['vmem_bytes']} VMEM bytes per launch "
+            f"exceeds the per-core budget of {VMEM_BYTES_PER_CORE}. "
+            f"Shrink the feature block or head count per launch.")

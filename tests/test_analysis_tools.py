@@ -70,6 +70,47 @@ def test_batched_dot_general():
     assert stats["dot_flops"] == 4 * 2 * 8 * 16 * 32
 
 
+def test_pallas_spmm_cost_exact():
+    """pallas_call eqns are costed by the per-kernel analytic model (the
+    kernel body is opaque to the generic eqn walk)."""
+    from repro.kernels.spmm import ops as spmm_ops
+
+    rng = np.random.default_rng(3)
+    n, f = 64, 32
+    indptr = np.arange(n + 1) * 4
+    indices = rng.integers(0, n, 4 * n).astype(np.int32)
+    ell_idx, _ = spmm_ops.csr_to_ell(indptr, indices)
+
+    def fwd(x):
+        return spmm_ops.spmm_ell(jnp.asarray(ell_idx), None, x,
+                                 force_pallas=True, interpret=True)
+
+    x = jax.ShapeDtypeStruct((n, f), jnp.float32)
+    stats = jaxpr_stats.step_stats(fwd, x)
+    r, k = ell_idx.shape
+    assert stats["pallas_flops"] == 2 * r * k * f
+    assert stats["pallas_flops"] <= stats["total_flops"]  # + glue eltwise
+    assert stats["major_bytes"] >= r * k * 4  # at least the prefetch table
+
+
+def test_pallas_cost_generic_fallback():
+    """An unknown kernel name still contributes (out-elems, io-bytes)."""
+    from jax.experimental import pallas as pl
+
+    def kernel(x_ref, o_ref):
+        o_ref[...] = x_ref[...] * 2
+
+    def fwd(x):
+        return pl.pallas_call(
+            kernel, out_shape=jax.ShapeDtypeStruct((8, 16), jnp.float32),
+            interpret=True)(x)
+
+    stats = jaxpr_stats.step_stats(
+        fwd, jax.ShapeDtypeStruct((8, 16), jnp.float32))
+    assert stats["pallas_flops"] == 8 * 16
+    assert stats["major_bytes"] == 2 * 8 * 16 * 4
+
+
 SAMPLE_HLO = """
 HloModule test
 

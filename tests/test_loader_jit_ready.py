@@ -140,26 +140,32 @@ def test_loader_batch_matmul_parity(rng):
                                    rtol=1e-4, atol=1e-4)
 
 
-def test_loader_batch_hits_pallas_single_trace(rng, monkeypatch):
+def test_loader_batch_hits_pallas_single_trace(rng):
     """The acceptance path: prefetch-producer batches dispatch to the Pallas
-    ELL kernel inside jit, with ONE trace across two different batches."""
-    calls, traces = [], []
-    real = spmm_ops.spmm_ell_pallas
-    monkeypatch.setattr(spmm_ops, "spmm_ell_pallas",
-                        lambda *a, **k: (calls.append(1), real(*a, **k))[1])
+    ELL kernel inside jit, with ONE trace across two different batches —
+    proven statically by the jaxpr dispatch auditor (zero oracle-scope eqns,
+    a `_spmm_ell_kernel` launch) plus a RetraceSentinel over the batches,
+    instead of a monkey-patched kernel spy."""
+    from repro.analysis import RetraceSentinel, audit_report
+
     loader = NeighborLoader(_data(rng), _data(rng), num_neighbors=[4, 3],
                             batch_size=8, prefetch=2, prefill_ell=True)
 
+    sentinel = RetraceSentinel(budget=1)
+
     @jax.jit
     def step(batch):
-        traces.append(1)  # runs only while tracing
         return batch.edge_index.matmul(batch.x, force_pallas=True)
 
+    step = sentinel.wrap(step, name="loader_step")
     it = iter(loader)
     b1, b2 = next(it), next(it)
+    report = audit_report(step, b1)
+    report.assert_fused(expect_kernels=("_spmm_ell_kernel",))
+    assert report.oracle_fallbacks == 0
     o1, o2 = step(b1), step(b2)
-    assert calls, "loader batch did not reach the Pallas ELL kernel"
-    assert len(traces) == 1, "second batch retraced: pytree not static"
+    assert sentinel.count("loader_step") == 1, \
+        "second batch retraced: pytree not static"
     for b, o in ((b1, o1), (b2, o2)):
         raw = EdgeIndex(b.edge_index.data, b.num_nodes, b.num_nodes)
         np.testing.assert_allclose(

@@ -1,0 +1,356 @@
+"""PR 7 static-verification gate: lint, dispatch audits, budgets, retrace.
+
+Tier-1 anchors: ``test_lint_clean`` (the ``python -m repro.analysis`` exit-0
+contract over ``src/``), the golden dispatch audits proving the four bench
+step cells ride Pallas with zero oracle fallbacks and one trace, and the
+pack-time rejection of an over-budget ELL ladder.
+"""
+
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import (BudgetError, RetraceError, RetraceSentinel,
+                            audit_report, budget_headroom_summary,
+                            ell_layout_report, lint_source)
+from repro.analysis import lint as lint_mod
+from repro.analysis.__main__ import default_root, main as analysis_main
+from repro.kernels import budgets as hw
+from repro.kernels.spmm import ops as spmm_ops
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+# ------------------------------------------------------------------ lint
+def test_lint_clean():
+    """``python -m repro.analysis`` must exit 0 over the src/ tree."""
+    assert analysis_main([]) == 0
+
+
+def test_lint_default_root_is_src_tree():
+    assert default_root().endswith("src")
+    assert os.path.isdir(os.path.join(default_root(), "repro"))
+
+
+def test_lint_flags_raw_kernel_entry_outside_package():
+    src = "def f(t, x):\n    return spmm_ell_pallas(t, x)\n"
+    bad = lint_source("src/repro/nn/gnn/conv.py", src)
+    assert [f.rule for f in bad] == ["raw-kernel-entry"]
+    # the same call inside the kernel package is the wrapper's job: clean
+    assert not lint_source("src/repro/kernels/spmm/ops.py", src)
+
+
+def test_lint_flags_clock_and_rng_in_resilience():
+    src = ("import time\nimport random\nimport numpy as np\n"
+           "def jitter():\n"
+           "    t = time.time()\n"
+           "    r = np.random.random()\n"
+           "    g = np.random.default_rng()\n"
+           "    return t + r + g.random()\n")
+    bad = lint_source("src/repro/data/resilience.py", src)
+    rules = [f.rule for f in bad]
+    assert rules.count("injectable-clock-rng") == 4  # import + 3 calls
+    # identical source anywhere else is out of the rule's scope
+    assert not lint_source("src/repro/data/loader.py", src)
+
+
+def test_lint_flags_jnp_in_host_packing():
+    src = ("import jax.numpy as jnp\n"
+           "def csr_to_ell(indptr, indices):\n"
+           "    return jnp.asarray(indices)\n")
+    bad = lint_source("src/repro/kernels/spmm/ops.py", src)
+    assert [f.rule for f in bad] == ["host-packing-purity"]
+    # a function not on the producer-thread list may use jnp freely
+    ok = src.replace("csr_to_ell", "spmm_ell_weighted")
+    assert not lint_source("src/repro/kernels/spmm/ops.py", ok)
+
+
+def test_pytree_roundtrips_clean():
+    assert lint_mod.check_pytree_roundtrips() == []
+
+
+# --------------------------------------------------------------- budgets
+def test_over_budget_ell_layout_rejected_at_pack_time():
+    """A degree bound whose K rung needs more than the SMEM prefetch
+    budget must be rejected when the layout is built, not at launch."""
+    max_k = hw.MAX_PREFETCH_ELEMS // hw.DEFAULT_BR
+    with pytest.raises(BudgetError, match="prefetch"):
+        spmm_ops.ell_layout_from_bounds([(0, 8, max_k + 1)])
+    # the largest servable rung is fine
+    layout = spmm_ops.ell_layout_from_bounds([(0, 8, max_k)])
+    assert layout and layout[0][1] == max_k
+
+
+def test_over_budget_static_pack_rejected(rng):
+    indptr = np.arange(9, dtype=np.int64) * 2
+    indices = rng.integers(0, 8, 16).astype(np.int32)
+    rows = np.arange(8, dtype=np.int32)
+    bad_layout = [(rows, 2 * (hw.MAX_PREFETCH_ELEMS // hw.DEFAULT_BR))]
+    with pytest.raises(BudgetError, match="K="):
+        spmm_ops.csr_to_ell_static(indptr, indices, bad_layout)
+
+
+def test_budget_error_message_is_actionable():
+    with pytest.raises(BudgetError) as exc:
+        hw.check_ell_rung(hw.MAX_PREFETCH_ELEMS, block_rows=hw.DEFAULT_BR,
+                          context="unit test")
+    msg = str(exc.value)
+    assert "unit test" in msg and "MAX_PREFETCH_ELEMS" in msg
+    assert str(hw.MAX_PREFETCH_ELEMS // hw.DEFAULT_BR) in msg  # the remedy
+
+
+def test_ell_layout_report_and_headroom(rng):
+    layout = spmm_ops.ell_layout_from_bounds([(0, 16, 4), (16, 48, 12)])
+    recs = ell_layout_report(layout, feat=64)
+    assert len(recs) == len(layout)
+    assert all(not r["over_budget"] for r in recs)
+    assert all(0 <= r["smem_frac"] <= 1 for r in recs)
+    summary = budget_headroom_summary([layout], feat=64)
+    assert summary["min_smem_headroom_bytes"] > 0
+    assert summary["launches_audited"] >= len(layout) + 2
+
+
+# --------------------------------------------------- dispatch golden audits
+def _loader_batches(rng, count=2):
+    from repro.data.data import Data
+    from repro.data.loader import NeighborLoader
+
+    n, e, feat = 256, 2048, 32
+    data = Data(x=rng.standard_normal((n, feat)).astype(np.float32),
+                edge_index=np.stack([rng.integers(0, n, e),
+                                     rng.integers(0, n, e)]),
+                y=rng.integers(0, 4, n))
+    loader = NeighborLoader(data, data, num_neighbors=[4, 2], batch_size=8,
+                            shuffle=True, prefill_ell=True, seed=0)
+    it = iter(loader)
+    return [next(it) for _ in range(count)]
+
+
+def test_golden_audit_loader_step(rng):
+    """The loader_step cell: forced-Pallas grad step == zero oracle eqns,
+    `_spmm_ell_kernel` launched, one signature across batches."""
+    batches = _loader_batches(rng)
+    feat, hidden = batches[0].x.shape[1], 16
+    params = {"w1": jnp.zeros((feat, hidden)), "w2": jnp.zeros((hidden, 4))}
+
+    def step(p, batch):
+        def loss_fn(p):
+            h = jax.nn.relu(batch.edge_index.matmul(
+                batch.x @ p["w1"], force_pallas=True, interpret=True))
+            out = batch.edge_index.matmul(
+                h @ p["w2"], force_pallas=True, interpret=True)
+            return (out[batch.seed_slots] ** 2).mean()
+
+        return jax.value_and_grad(loss_fn)(p)
+
+    report = audit_report(step, params, batches[0])
+    report.assert_fused(expect_kernels=("_spmm_ell_kernel",))
+    assert report.oracle_fallbacks == 0
+    sentinel = RetraceSentinel(budget=1)
+    probe = sentinel.wrap(lambda p, b: None, name="loader_step")
+    for b in batches:
+        probe(params, b)
+    assert sentinel.count("loader_step") == 1
+
+
+def test_golden_audit_train_step_weighted(rng):
+    """The train_step cell (gcn-normalised weighted aggregation)."""
+    from repro.nn.gnn.conv import gcn_norm
+
+    batches = _loader_batches(rng)
+    feat, hidden = batches[0].x.shape[1], 16
+    params = {"w1": jnp.zeros((feat, hidden)), "w2": jnp.zeros((hidden, 4))}
+
+    def step(p, batch):
+        def loss_fn(p):
+            ew, _ = gcn_norm(batch.edge_index, batch.num_nodes,
+                             add_self_loops=False)
+            h = jax.nn.relu(batch.edge_index.matmul(
+                batch.x @ p["w1"], edge_weight=ew, force_pallas=True,
+                interpret=True))
+            out = batch.edge_index.matmul(
+                h @ p["w2"], edge_weight=ew, force_pallas=True,
+                interpret=True)
+            return (out[batch.seed_slots] ** 2).mean()
+
+        return jax.value_and_grad(loss_fn)(p)
+
+    report = audit_report(step, params, batches[0])
+    report.assert_fused(expect_kernels=("_spmm_ell_kernel",))
+    # the ops-level custom-VJP backward is attributed, not misread as oracle
+    assert report.kernel_vjp_eqns.get("spmm_ell", 0) > 0
+
+
+def test_golden_audit_gat_step(rng, monkeypatch):
+    """The gat_step cell: fused flash-GAT attention, zero fallbacks."""
+    from repro.nn.gnn.conv import GATConv
+
+    monkeypatch.setenv("REPRO_USE_PALLAS", "1")
+    batches = _loader_batches(rng)
+    feat = batches[0].x.shape[1]
+    conv = GATConv(feat, 16, heads=4)
+    params = conv.init(jax.random.PRNGKey(0))
+
+    def step(p, batch):
+        def loss_fn(p):
+            out = conv.apply(p, batch.x, batch.edge_index)
+            return (out[batch.seed_slots] ** 2).mean()
+
+        return jax.value_and_grad(loss_fn)(p)
+
+    report = audit_report(step, params, batches[0])
+    report.assert_fused(expect_kernels=("_gat_ell_kernel",))
+    assert report.oracle_fallbacks == 0
+    sentinel = RetraceSentinel(budget=1)
+    probe = sentinel.wrap(lambda p, b: None, name="gat_step")
+    for b in batches:
+        probe(params, b)
+    assert sentinel.count("gat_step") == 1
+
+
+def test_golden_audit_hetero_step(rng, monkeypatch):
+    """The hetero_step cell: grouped projections (`_gmm_kernel`) plus
+    per-relation ELL aggregation, zero oracle fallbacks."""
+    from repro.core.hetero import to_hetero
+    from repro.data.data import HeteroData
+    from repro.data.hetero_sampler import HeteroNeighborLoader
+    from repro.nn.gnn.conv import SAGEConv
+
+    monkeypatch.setenv("REPRO_USE_PALLAS", "1")
+    n_user, n_item, e, feat = 128, 256, 1024, 16
+    fan = {("user", "buys", "item"): [4, 2],
+           ("item", "rev_buys", "user"): [4, 2]}
+    hd = HeteroData()
+    hd.add_nodes("user", rng.standard_normal((n_user, feat)).astype(
+        np.float32))
+    hd.add_nodes("item", rng.standard_normal((n_item, feat)).astype(
+        np.float32))
+    ub = np.stack([rng.integers(0, n_user, e), rng.integers(0, n_item, e)])
+    hd.add_edges(("user", "buys", "item"), ub)
+    hd.add_edges(("item", "rev_buys", "user"), ub[::-1])
+    loader = HeteroNeighborLoader(
+        hd, hd, num_neighbors=fan, input_type="item",
+        input_nodes=np.arange(n_item), batch_size=8, prefill_ell=True,
+        seed=0)
+    it = iter(loader)
+    batches = [next(it) for _ in range(2)]
+    net = to_hetero(lambda i, o: SAGEConv(i, o), (["user", "item"],
+                                                  list(fan)),
+                    [feat, 8, 4], grouped=True)
+    params = net.init(jax.random.PRNGKey(0))
+
+    def step(p, batch):
+        def loss_fn(p):
+            out = net.apply(p, batch.x_dict, batch.edge_index_dict,
+                            batch.num_nodes_dict)
+            return (batch.seed_output(out) ** 2).mean()
+
+        return jax.value_and_grad(loss_fn)(p)
+
+    report = audit_report(step, params, batches[0])
+    report.assert_fused(expect_kernels=("_spmm_ell_kernel", "_gmm_kernel"))
+    sentinel = RetraceSentinel(budget=1)
+    probe = sentinel.wrap(lambda p, b: None, name="hetero_step")
+    for b in batches:
+        probe(params, b)
+    assert sentinel.count("hetero_step") == 1
+
+
+def test_audit_flags_oracle_path(rng):
+    """The auditor must *reject* the XLA oracle branch (negative control)."""
+    batch = _loader_batches(rng, count=1)[0]
+
+    def fwd(x):
+        return batch.edge_index.matmul(x, force_pallas=False)
+
+    report = audit_report(fwd, jnp.zeros_like(batch.x))
+    assert report.oracle_fallbacks > 0
+    assert "spmm" in " ".join(report.oracle_eqns)
+    with pytest.raises(AssertionError, match="oracle fallback"):
+        report.assert_fused()
+
+
+def test_bench_fastpath_audit_cell(tmp_path):
+    """The registered bench cell writes the audit record end to end."""
+    if REPO_ROOT not in sys.path:
+        sys.path.insert(0, REPO_ROOT)
+    import json
+
+    from benchmarks import fastpath_audit
+
+    out = str(tmp_path / "BENCH_audit.json")
+    fastpath_audit.run(out)
+    rec = [r for r in json.load(open(out)) if r["cell"] == "fastpath_audit"]
+    assert len(rec) == 1
+    audits = rec[0]["audits"]
+    assert set(audits) == {"loader_step", "train_step", "hetero_step",
+                           "gat_step"}
+    for name, a in audits.items():
+        assert a["oracle_fallbacks"] == 0, (name, a)
+        assert a["trace_count"] == 1, (name, a)
+        assert a["kernel_launches"], (name, a)
+    assert rec[0]["budget_headroom"]["min_smem_headroom_bytes"] > 0
+
+
+# ---------------------------------------------------------------- retrace
+def test_retrace_sentinel_diff_on_shape_change():
+    sentinel = RetraceSentinel(budget=1)
+    f = sentinel.wrap(lambda x: x, name="f")
+    f(jnp.zeros((4, 8)))
+    f(jnp.zeros((4, 8)))  # same signature: free
+    with pytest.raises(RetraceError) as exc:
+        f(jnp.zeros((5, 8)))
+    msg = str(exc.value)
+    assert "2 distinct" in msg and "(4, 8)" in msg and "(5, 8)" in msg
+
+
+def test_retrace_sentinel_static_aux_diff():
+    sentinel = RetraceSentinel(budget=1)
+    f = sentinel.wrap(lambda x, flag: x, name="f")
+    f(jnp.zeros(3), True)
+    with pytest.raises(RetraceError, match="static"):
+        f(jnp.zeros(3), False)
+
+
+def test_retrace_sentinel_record_only_mode():
+    sentinel = RetraceSentinel(budget=None)
+    f = sentinel.wrap(lambda x: x, name="f")
+    for n in (1, 2, 3):
+        f(jnp.zeros(n))
+    assert sentinel.count("f") == 3
+    sentinel.check()  # no budget -> never raises
+
+
+def test_retrace_sentinel_context_manager_checks_on_exit():
+    with pytest.raises(RetraceError):
+        with RetraceSentinel(budget=0) as sentinel:
+            sentinel.wrap(lambda: None, name="g")()
+
+
+def test_train_loop_reports_trace_signatures():
+    from repro.train.loop import train_loop
+
+    class _State:
+        pass
+
+    def step(state, batch):
+        return state, {"loss": jnp.asarray(float(batch["x"].sum()))}
+
+    batches = iter([{"x": jnp.ones((2, 4))} for _ in range(3)])
+    out = train_loop(_State(), step, batches, num_steps=3, log_every=100,
+                     log_fn=lambda *a: None)
+    assert out["trace_signatures"] == 1
+
+    bad = iter([{"x": jnp.ones((2, 4))}, {"x": jnp.ones((3, 4))}])
+    with pytest.raises(RetraceError):
+        train_loop(_State(), step, bad, num_steps=2, retrace_budget=1,
+                   log_every=100, log_fn=lambda *a: None)
