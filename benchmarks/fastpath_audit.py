@@ -84,7 +84,8 @@ def run(out_path: str = "BENCH_spmm.json") -> None:
                                      rng.integers(0, n, e)]),
                 y=rng.integers(0, 4, n))
     loader = NeighborLoader(data, data, num_neighbors=[4, 2], batch_size=8,
-                            shuffle=True, prefill_ell=True, seed=0)
+                            shuffle=True, prefill_ell=True,
+                            pipeline_depth=2, prefetch=2, seed=0)
     it = iter(loader)
     batches = [next(it) for _ in range(3)]
     audits = {}
@@ -161,7 +162,7 @@ def run(out_path: str = "BENCH_spmm.json") -> None:
     hloader = HeteroNeighborLoader(
         hd, hd, num_neighbors=fan, input_type="item",
         input_nodes=np.arange(n_item), batch_size=8, shuffle=True,
-        prefill_ell=True, seed=0)
+        prefill_ell=True, pipeline_depth=2, prefetch=2, seed=0)
     hit = iter(hloader)
     hbatches = [next(hit) for _ in range(3)]
     net = to_hetero(lambda i, o: SAGEConv(i, o), (["user", "item"],

@@ -136,7 +136,8 @@ def run_loader_step(out_path: str = "BENCH_spmm.json") -> None:
                 y=rng.integers(0, 4, n))
     loader = NeighborLoader(data, data, num_neighbors=fanouts,
                             batch_size=batch_size, shuffle=True,
-                            prefetch=2, prefill_ell=True, seed=0)
+                            pipeline_depth=2, prefetch=2, prefill_ell=True,
+                            seed=0)
     params = {
         "w1": jnp.asarray(rng.standard_normal((feat, hidden)) * 0.1,
                           jnp.float32),
@@ -256,7 +257,8 @@ def run_train_step(out_path: str = "BENCH_spmm.json") -> None:
                 y=rng.integers(0, 4, n))
     loader = NeighborLoader(data, data, num_neighbors=fanouts,
                             batch_size=batch_size, shuffle=True,
-                            prefill_ell=True, seed=0)
+                            pipeline_depth=2, prefetch=2, prefill_ell=True,
+                            seed=0)
     params = {
         "w1": jnp.asarray(rng.standard_normal((feat, hidden)) * 0.1,
                           jnp.float32),
@@ -477,7 +479,8 @@ def run_gat_step(out_path: str = "BENCH_spmm.json") -> None:
                 y=rng.integers(0, 4, n))
     loader = NeighborLoader(data, data, num_neighbors=fanouts,
                             batch_size=batch_size, shuffle=True,
-                            prefill_ell=True, seed=0)
+                            pipeline_depth=2, prefetch=2, prefill_ell=True,
+                            seed=0)
     conv = GATConv(feat, hidden, heads=heads)
     params = conv.init(jax.random.PRNGKey(0))
     sentinel = RetraceSentinel(budget=1)

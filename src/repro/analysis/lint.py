@@ -9,14 +9,19 @@ Four rules, each encoding an invariant the stack's correctness rests on:
     the differentiable, budget-checked public surface). A call anywhere
     else bypasses the custom VJP, the SMEM chunking, and the budget
     validation at once.
-  * **injectable-clock-rng** — ``data/resilience.py`` fault paths must stay
-    deterministic and testable: no ``time.time()``, no stdlib ``random``,
-    no global-state ``np.random.*`` calls, no zero-arg ``default_rng()``
-    (the injectable ``clock=``/``sleep=``/seeded-rng discipline).
+  * **injectable-clock-rng** — the deterministic host paths
+    (``data/resilience.py`` fault handling, ``data/loader.py`` batch
+    production, ``data/feature_store.py`` cache eviction,
+    ``data/partition.py`` region growing) must stay deterministic and
+    testable: no ``time.time()``, no stdlib ``random``, no global-state
+    ``np.random.*`` calls, no zero-arg ``default_rng()`` (the injectable
+    ``clock=``/``sleep=``/seeded-rng discipline).
   * **host-packing-purity** — the producer-thread packers (CSR->ELL
-    packing, grouped-matmul pack plans, slot-bound computation) must be
-    pure numpy: a ``jnp.``/``jax.`` call there moves device work (and
-    possibly tracing) onto the loader's producer thread.
+    packing, grouped-matmul pack plans, slot-bound computation) and the
+    loader pipeline's sample/gather stages plus the hot-cache eviction
+    must be pure numpy: a ``jnp.``/``jax.`` call there moves device work
+    (and possibly tracing) onto the loader's producer/stage threads —
+    only ``_stage_pack`` may touch jnp, on purpose.
   * **pytree-roundtrip** (dynamic, not AST) — every registered pytree
     (``Batch``, ``HeteroBatch``, ``EdgeIndex``) must flatten/unflatten to
     an equal treedef with its aux fields intact, else batches silently
@@ -46,16 +51,36 @@ RAW_KERNEL_ENTRIES: Dict[str, str] = {
 
 # path suffix -> function names that must stay jnp/jax-free (producer-thread
 # host packing: shape decisions and table packing, pure numpy by contract).
+# The loader pipeline's sample/gather stages and the hot-row cache's
+# lookup/insert/eviction run on producer/stage threads and obey the same
+# contract — only _stage_pack is allowed to touch jnp (device put).
 HOST_PACKING_FUNCS: Dict[str, Set[str]] = {
     "repro/kernels/spmm/ops.py": {
         "_ell_positions", "csr_to_ell", "csr_to_ell_bucketed",
         "csr_to_ell_static", "ell_layout_from_bounds"},
     "repro/kernels/grouped_matmul/ops.py": {"_pack_plan"},
     "repro/data/sampler.py": {"static_slot_bounds"},
-    "repro/data/hetero_sampler.py": {"hetero_static_slot_bounds"},
+    "repro/data/hetero_sampler.py": {
+        "hetero_static_slot_bounds", "_stage_sample", "_stage_gather"},
+    "repro/data/loader.py": {
+        "_stage_sample", "_stage_gather", "_seed_batches", "_seed_route"},
+    "repro/data/feature_store.py": {"lookup", "insert", "_evict", "_get"},
+    "repro/data/partition.py": {
+        "partition_graph", "_frontier_neighbors", "_undirected_csr"},
 }
 
-RESILIENCE_SUFFIX = "repro/data/resilience.py"
+# Files whose host-side control flow must be deterministic and testable:
+# resilience fault paths, the loader's stage pipeline + seed batching, the
+# feature-store caches' eviction, and the partitioner's region growing.
+DETERMINISTIC_HOST_SUFFIXES: Tuple[str, ...] = (
+    "repro/data/resilience.py",
+    "repro/data/loader.py",
+    "repro/data/feature_store.py",
+    "repro/data/partition.py",
+)
+
+# backward-compat alias (pre-pipeline rule scope)
+RESILIENCE_SUFFIX = DETERMINISTIC_HOST_SUFFIXES[0]
 
 # numpy global-state RNG entry points (the seeded-Generator API is fine).
 _NP_GLOBAL_RNG = {"seed", "random", "rand", "randn", "randint", "choice",
@@ -115,7 +140,7 @@ def _lint_raw_kernel_entries(path: str, tree: ast.AST) -> List[Finding]:
 
 
 def _lint_resilience_clock_rng(path: str, tree: ast.AST) -> List[Finding]:
-    if not _posix(path).endswith(RESILIENCE_SUFFIX):
+    if not _posix(path).endswith(DETERMINISTIC_HOST_SUFFIXES):
         return []
     findings = []
     for node in ast.walk(tree):

@@ -12,7 +12,24 @@ Implementations here:
     (the JAX-land stand-in for WholeGraph/remote KV stores). Fetch counters
     expose the remote-traffic behaviour that the paper's distributed
     benchmarks measure (``stats`` is lock-guarded: the resilient fan-out
-    issues concurrent per-partition gets from a thread pool).
+    and the pipelined loader issue concurrent gets from thread pools).
+  * CachedFeatureStore — a bounded cross-batch **hot-feature cache** over
+    any backend: power-law graphs refetch the same hub rows every batch,
+    and this wrapper short-circuits those rows out of the traffic entirely
+    (seeded sampled-LFU eviction, pure numpy, hit/miss counters). Distinct
+    from resilience's last-known-good cache, which serves *only on
+    failure* — this one serves on every hit and changes traffic, never
+    failure semantics.
+  * MmapFeatureStore — **out-of-core** features: tensors live in on-disk
+    ``np.memmap`` files and gathers touch only the requested rows' pages,
+    so a feature matrix far larger than the configured host-memory budget
+    streams through the unchanged loader -> jit'd step (the paper's
+    disk-backed-store claim); full-tensor materialisation above the budget
+    is refused with ``MemoryBudgetError``.
+
+Every store exposes ``reset_stats()``, which zeroes the ``stats``/``health``
+counter dicts down the whole ``.inner`` wrapper chain (benchmarks reset
+between cells instead of poking ``fs.stats`` by hand).
 
 Fault tolerance lives one layer up, in ``repro.data.resilience``:
 ``ResilientFeatureStore`` decorates any backend here with bounded retries,
@@ -20,17 +37,29 @@ per-fetch deadlines, per-partition circuit breakers, and a last-known-good
 row cache that serves stale features (recorded in its ``health`` counters
 and the batch's ``extras['degraded']`` mask) when a partition is down;
 ``ChaosFeatureStore`` injects deterministic faults for tests/benchmarks.
+The wrappers compose through ``.inner`` — e.g.
+``ResilientFeatureStore(CachedFeatureStore(PartitionedFeatureStore(...)))``
+keeps routing discovery, the hot cache, and degradation all working.
 """
 
 from __future__ import annotations
 
 import abc
+import os
+import tempfile
 import threading
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 Key = Tuple[str, str]  # (group e.g. node type, attr e.g. 'x')
+
+
+class MemoryBudgetError(RuntimeError):
+    """A fetch would materialise more bytes than the configured budget.
+
+    Deliberately NOT a ``TransientStoreError``: exceeding the host-memory
+    budget is a programming/sizing bug, not a fault to retry or degrade."""
 
 
 class FeatureStore(abc.ABC):
@@ -72,6 +101,21 @@ class FeatureStore(abc.ABC):
         out = np.full((len(index),) + rows.shape[1:], fill, dtype=rows.dtype)
         out[valid] = rows
         return out
+
+    def reset_stats(self):
+        """Zero every counter dict (``stats``/``health``) down the wrapper
+        chain, in place (shared references stay live). Returns ``self`` so
+        benchmarks can chain it."""
+        s = self
+        while s is not None:
+            for name in ("stats", "health"):
+                d = getattr(s, name, None)
+                if isinstance(d, dict):
+                    for k in d:
+                        if isinstance(d[k], (int, float)):
+                            d[k] = 0
+            s = getattr(s, "inner", None)
+        return self
 
 
 class InMemoryFeatureStore(FeatureStore):
@@ -147,20 +191,285 @@ class PartitionedFeatureStore(FeatureStore):
         part = route[index]
         feat_dim, dtype = self._feat_meta(key)
         out = np.zeros((len(index),) + feat_dim, dtype=dtype)
+        local_rows = remote_rows = 0
+        # gathers run lock-free so pipelined batches overlap; only the
+        # counter update is guarded
+        for p in range(self.num_parts):
+            m = part == p
+            cnt = int(m.sum())
+            if not cnt:
+                continue
+            out[m] = self._parts[key][p][local[m]]
+            if p == self.local_rank:
+                local_rows += cnt
+            else:
+                remote_rows += cnt
         with self._lock:
             self.stats["requests"] += 1
-            for p in range(self.num_parts):
-                m = part == p
-                cnt = int(m.sum())
-                if not cnt:
-                    continue
-                out[m] = self._parts[key][p][local[m]]
-                if p == self.local_rank:
-                    self.stats["local_rows"] += cnt
-                else:
-                    self.stats["remote_rows"] += cnt
+            self.stats["local_rows"] += local_rows
+            self.stats["remote_rows"] += remote_rows
         return out
 
     def _size(self, key):
         n = len(self._route[key])
         return (n,) + self._feat_meta(key)[0]
+
+
+# --------------------------------------------------------------------------
+# Cross-batch hot-feature cache
+# --------------------------------------------------------------------------
+
+class HotRowCache:
+    """Bounded hot-row cache: pure-numpy lookup/insert, seeded eviction.
+
+    ``slot_of`` maps global row -> slot (-1 = not cached), ``owner`` maps
+    slot -> global row, ``hits`` counts per-slot lookups since insertion.
+    Eviction is **sampled-LFU with a seeded rng**: when slots run out, a
+    seeded random candidate window is drawn and its least-hit slots (slot
+    index as the deterministic tiebreak) are reclaimed — hubs with high hit
+    counts survive, and the whole decision sequence is reproducible from
+    the seed. All operations are vectorised gathers/scatters (no per-row
+    Python), so the zero-miss overhead stays in the noise on the loader's
+    gather path.
+    """
+
+    # evict from a candidate window this many times the needed slot count
+    # (power-of-k-choices: wider windows approximate true LFU more closely)
+    CANDIDATE_FACTOR = 4
+
+    def __init__(self, num_rows: int, capacity: int, seed: int = 0):
+        self.capacity = max(int(capacity), 1)
+        self.slot_of = np.full(num_rows, -1, np.int64)
+        self.owner = np.full(self.capacity, -1, np.int64)
+        self.hits = np.zeros(self.capacity, np.int64)
+        self.vals: Optional[np.ndarray] = None
+        self.evictions = 0
+        self._rng = np.random.default_rng(seed)
+
+    def lookup(self, rows: np.ndarray
+               ) -> Tuple[Optional[np.ndarray], np.ndarray]:
+        """-> (values for the cached subset, have-mask over ``rows``)."""
+        rows = np.asarray(rows, np.int64)
+        slot = self.slot_of[rows]
+        have = slot >= 0
+        if self.vals is None or not have.any():
+            return None, np.zeros(len(rows), bool)
+        np.add.at(self.hits, slot[have], 1)
+        return self.vals[slot[have]], have
+
+    def insert(self, rows: np.ndarray, values: np.ndarray) -> None:
+        rows = np.asarray(rows, np.int64)
+        if rows.size == 0:
+            return
+        # first-occurrence dedup (concurrent fetches may overlap rows)
+        _, first = np.unique(rows, return_index=True)
+        keep = np.sort(first)
+        rows, values = rows[keep], values[keep]
+        if self.vals is None:
+            self.vals = np.zeros((self.capacity,) + values.shape[1:],
+                                 values.dtype)
+        slot = self.slot_of[rows]
+        cached = slot >= 0
+        self.vals[slot[cached]] = values[cached]  # refresh in place
+        new_rows, new_vals = rows[~cached], values[~cached]
+        if new_rows.size == 0:
+            return
+        # slots holding rows refreshed this call must not be reclaimed
+        protected = np.zeros(self.capacity, bool)
+        protected[slot[cached]] = True
+        avail = self.capacity - int(protected.sum())
+        if len(new_rows) > avail:  # keep the first `avail` (deterministic)
+            new_rows, new_vals = new_rows[:avail], new_vals[:avail]
+        free = np.where(self.owner < 0)[0][:len(new_rows)]
+        sel = free
+        need = len(new_rows) - len(free)
+        if need > 0:
+            sel = np.concatenate([free, self._evict(need, protected)])
+        prev = self.owner[sel]
+        live = prev >= 0
+        self.evictions += int(live.sum())
+        self.slot_of[prev[live]] = -1
+        self.owner[sel] = new_rows
+        self.slot_of[new_rows] = sel
+        self.hits[sel] = 0
+        self.vals[sel] = new_vals
+
+    def _evict(self, need: int, protected: np.ndarray) -> np.ndarray:
+        """Reclaim ``need`` occupied slots: seeded sampled-LFU."""
+        window = self._rng.permutation(self.capacity)
+        window = window[~protected[window] & (self.owner[window] >= 0)]
+        window = window[:max(need * self.CANDIDATE_FACTOR, need)]
+        ranked = window[np.lexsort((window, self.hits[window]))]
+        return ranked[:need]
+
+
+class CachedFeatureStore(FeatureStore):
+    """Cross-batch hot-feature cache over any backend.
+
+    Power-law graphs resample the same hub nodes in nearly every batch; in
+    a store-backed pipeline those rows are refetched from remote partitions
+    again and again. This wrapper keeps a bounded ``HotRowCache`` per
+    (group, attr) key and serves cache hits locally, fetching only the
+    missing rows from ``inner`` — cutting remote-row traffic without
+    touching loader or step code. ``stats`` counts hits/misses/evictions;
+    ``hit_rate()`` is the headline number ``benchmarks/store_scaling.py``
+    reports. Lookup/insert run under a lock; the miss fetch does NOT, so
+    concurrent pipeline gathers still overlap (two threads missing the same
+    row both fetch it and the second insert refreshes — consistent, just
+    briefly duplicated traffic).
+
+    Unlike ``resilience._RowCache`` (last-known-good, consulted only when a
+    partition is down) this cache serves on every hit: it changes traffic,
+    never failure semantics — a fault in ``inner`` still propagates for the
+    uncached rows.
+    """
+
+    def __init__(self, inner: FeatureStore, *, capacity: int = 4096,
+                 seed: int = 0):
+        self.inner = inner
+        self.capacity = int(capacity)
+        self._seed = seed
+        self._caches: Dict[Key, HotRowCache] = {}
+        self.stats = {"requests": 0, "hits": 0, "misses": 0, "evictions": 0}
+        self._lock = threading.Lock()
+
+    def hit_rate(self) -> float:
+        total = self.stats["hits"] + self.stats["misses"]
+        return self.stats["hits"] / total if total else 0.0
+
+    def _cache_for(self, key: Key) -> HotRowCache:
+        with self._lock:
+            if key not in self._caches:
+                n = int(self.inner._size(key)[0])
+                self._caches[key] = HotRowCache(n, self.capacity,
+                                                seed=self._seed)
+            return self._caches[key]
+
+    def _put(self, key, tensor):
+        self.inner._put(key, tensor)
+        with self._lock:  # stale rows must not outlive the backing tensor
+            self._caches.pop(key, None)
+
+    def _get(self, key, index):
+        if index is None:  # full-tensor reads bypass the row cache
+            return self.inner._get(key, None)
+        index = np.asarray(index, np.int64)
+        cache = self._cache_for(key)
+        with self._lock:
+            self.stats["requests"] += 1
+            vals, have = cache.lookup(index)
+            self.stats["hits"] += int(have.sum())
+            self.stats["misses"] += int(len(index) - have.sum())
+        if have.all():
+            return vals
+        fetched = np.asarray(self.inner._get(key, index[~have]))
+        out = np.zeros((len(index),) + fetched.shape[1:], fetched.dtype)
+        out[~have] = fetched
+        if vals is not None:
+            out[have] = vals
+        with self._lock:
+            cache.insert(index[~have], fetched)
+            self.stats["evictions"] = sum(c.evictions
+                                          for c in self._caches.values())
+        return out
+
+    def _size(self, key):
+        return self.inner._size(key)
+
+
+# --------------------------------------------------------------------------
+# Out-of-core (memory-mapped) feature store
+# --------------------------------------------------------------------------
+
+class MmapFeatureStore(FeatureStore):
+    """Disk-backed features through ``np.memmap`` under a host-memory budget.
+
+    Tensors live in ``.npy`` files on disk (``np.lib.format.open_memmap``);
+    a gather copies only the requested rows into host memory, so a feature
+    matrix many times the configured ``memory_budget_bytes`` streams through
+    the unchanged loader -> jit'd train step — the paper's out-of-core
+    claim, proven end-to-end by the ``store/out_of_core`` benchmark cell.
+
+    The budget gates *materialisation*, not storage: any single fetch whose
+    result would exceed ``memory_budget_bytes`` (including ``index=None``
+    full reads of an over-budget tensor) raises ``MemoryBudgetError``
+    instead of silently paging the host into the ground. ``put_tensor``
+    spills an in-memory array to disk; for matrices that never fit in
+    memory at all, ``create_tensor`` returns the writable memmap to be
+    filled in chunks.
+    """
+
+    def __init__(self, root: Optional[str] = None, *,
+                 memory_budget_bytes: int = 1 << 30):
+        self.root = root or tempfile.mkdtemp(prefix="repro-mmap-")
+        os.makedirs(self.root, exist_ok=True)
+        self.memory_budget_bytes = int(memory_budget_bytes)
+        self._maps: Dict[Key, np.memmap] = {}
+        self.stats = {"requests": 0, "rows_read": 0, "bytes_read": 0}
+        self._lock = threading.Lock()
+
+    def _path(self, key: Key) -> str:
+        group, attr = key
+        return os.path.join(self.root, f"{group}__{attr}.npy")
+
+    def create_tensor(self, shape: Sequence[int], dtype, *,
+                      group: str = "node", attr: str = "x") -> np.memmap:
+        """Allocate an on-disk tensor and return the writable memmap.
+
+        The caller fills it in chunks (never holding the full matrix in
+        host memory); the store serves gathers from the same file.
+        """
+        mm = np.lib.format.open_memmap(
+            self._path((group, attr)), mode="w+", dtype=np.dtype(dtype),
+            shape=tuple(int(s) for s in shape))
+        self._maps[(group, attr)] = mm
+        return mm
+
+    def _put(self, key, tensor):
+        mm = self.create_tensor(tensor.shape, tensor.dtype,
+                                group=key[0], attr=key[1])
+        mm[...] = tensor
+        mm.flush()
+
+    def _row_nbytes(self, mm: np.memmap) -> int:
+        return int(np.prod(mm.shape[1:], dtype=np.int64)) * mm.dtype.itemsize
+
+    def _map_for(self, key: Key) -> np.memmap:
+        """The key's memmap, reattaching to an existing file on disk (a
+        fresh store over a previously-written ``root``)."""
+        if key not in self._maps:
+            path = self._path(key)
+            if not os.path.exists(path):
+                raise KeyError(key)
+            self._maps[key] = np.lib.format.open_memmap(path, mode="r+")
+        return self._maps[key]
+
+    def _get(self, key, index):
+        mm = self._map_for(key)
+        if index is None:
+            need = mm.nbytes
+            if need > self.memory_budget_bytes:
+                raise MemoryBudgetError(
+                    f"full read of {key} would materialise {need} bytes "
+                    f"(> budget {self.memory_budget_bytes}); gather rows "
+                    f"instead")
+            with self._lock:
+                self.stats["requests"] += 1
+                self.stats["rows_read"] += int(mm.shape[0])
+                self.stats["bytes_read"] += int(need)
+            return np.array(mm)
+        index = np.asarray(index, np.int64)
+        need = len(index) * self._row_nbytes(mm)
+        if need > self.memory_budget_bytes:
+            raise MemoryBudgetError(
+                f"gather of {len(index)} rows of {key} would materialise "
+                f"{need} bytes (> budget {self.memory_budget_bytes})")
+        out = np.asarray(mm[index])  # copies only the touched pages
+        with self._lock:
+            self.stats["requests"] += 1
+            self.stats["rows_read"] += int(len(index))
+            self.stats["bytes_read"] += int(need)
+        return out
+
+    def _size(self, key):
+        return tuple(self._map_for(key).shape)

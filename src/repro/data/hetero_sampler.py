@@ -17,8 +17,12 @@ that type's store carries timestamps; types without timestamps sample
 unconstrained — exactly the paper's "node and edge types lacking timestamps
 ... sampling is performed without applying temporal constraints".
 
-``HeteroNeighborLoader`` rides the shared producer-thread/prefetch
-machinery of ``repro.data.loader`` and emits registered-pytree
+``HeteroNeighborLoader`` rides the shared producer-thread/prefetch and
+stage-pipeline machinery of ``repro.data.loader`` (sequential sample on
+the coordinator, per-type feature gathers overlapped on the worker pool
+with ``pipeline_depth`` batches in flight, pack at ordered reassembly;
+``partition_order`` groups seed batches by the input type's home
+partition) and emits registered-pytree
 ``HeteroBatch``es whose per-edge-type graphs carry host-built CSR/CSC (and,
 when Pallas dispatch is on, static-layout bucketed ELL) caches — one jit
 trace across batches, every relation's aggregation on the Pallas SpMM path.
@@ -363,11 +367,13 @@ class HeteroNeighborLoader(_PrefetchLoader):
                  temporal_strategy: str = "uniform",
                  transform=None, shuffle: bool = False,
                  drop_last: bool = True, prefetch: int = 0,
+                 pipeline_depth: int = 1, partition_order: bool = False,
                  prefill_ell: Optional[bool] = None,
                  on_batch_error: str = "raise", batch_retries: int = 2,
                  seed: int = 0):
         self.fs = feature_store
         self._init_policy(on_batch_error, batch_retries)
+        self._init_pipeline(pipeline_depth, partition_order)
         self.sampler = HeteroNeighborSampler(
             graph_store, num_neighbors,
             temporal_strategy=temporal_strategy, seed=seed)
@@ -393,47 +399,64 @@ class HeteroNeighborLoader(_PrefetchLoader):
                 et: ell_layout_from_bounds(b) for et, b in bounds.items()}
         return self._ell_layouts[num_seeds]
 
-    def _make_batch(self, seeds: np.ndarray,
-                    seed_time: Optional[np.ndarray]) -> HeteroBatch:
+    def _seed_feature_key(self):
+        return (self.input_type, "x")
+
+    # ---- stages (see _PrefetchLoader: sample is sequential, gather+pack
+    # run on the stage pool when pipeline_depth > 1) ----
+    def _stage_sample(self, seeds: np.ndarray,
+                      seed_time: Optional[np.ndarray]):
         out = self.sampler.sample(self.input_type, seeds, seed_time)
         fill_ell = (use_pallas() if self.prefill_ell is None
                     else self.prefill_ell)
         layouts = self._ell_layouts_for(len(seeds)) if fill_ell else {}
+        return {"seeds": seeds, "out": out, "layouts": layouts,
+                "fill_ell": fill_ell}
+
+    def _stage_gather(self, sample):
+        out = sample["out"]
         fetch = getattr(self.fs, "get_padded_resilient", None)
         degraded = None
         if fetch is not None:  # resilient store: per-type degraded masks
             fetched = {t: fetch(n, group=t, attr="x")
                        for t, n in out.node.items()}
-            x_dict = {t: jnp.asarray(v[0]) for t, v in fetched.items()}
-            degraded = {t: jnp.asarray(v[1]) for t, v in fetched.items()}
+            x_dict = {t: v[0] for t, v in fetched.items()}
+            degraded = {t: v[1] for t, v in fetched.items()}
         else:
-            x_dict = {t: jnp.asarray(self.fs.get_padded(n, group=t,
-                                                        attr="x"))
+            x_dict = {t: self.fs.get_padded(n, group=t, attr="x")
                       for t, n in out.node.items()}
+        y = None
+        if self.labels_attr is not None:
+            try:
+                y = self.fs.get_tensor(
+                    group=self.input_type, attr=self.labels_attr,
+                    index=sample["seeds"])
+            except KeyError:
+                y = None
+        return {"x_dict": x_dict, "y": y, "degraded": degraded}
+
+    def _stage_pack(self, sample, gather) -> HeteroBatch:
+        out = sample["out"]
+        layouts, fill_ell = sample["layouts"], sample["fill_ell"]
         ei_dict = {}
         for et in self.sampler.edge_types:
             ei_dict[et] = EdgeIndex.from_coo_prefilled(
                 out.row[et], out.col[et],
                 len(out.node[et[0]]), len(out.node[et[2]]),
                 ell_layout=layouts.get(et, []) if fill_ell else None)
-        y = None
-        if self.labels_attr is not None:
-            try:
-                y = jnp.asarray(self.fs.get_tensor(
-                    group=self.input_type, attr=self.labels_attr,
-                    index=seeds))
-            except KeyError:
-                y = None
         batch = HeteroBatch(
-            x_dict=x_dict, edge_index_dict=ei_dict,
+            x_dict={t: jnp.asarray(v) for t, v in gather["x_dict"].items()},
+            edge_index_dict=ei_dict,
             n_id_dict={t: jnp.asarray(n) for t, n in out.node.items()},
             e_id_dict={et: jnp.asarray(e) for et, e in out.edge.items()},
             seed_slots=jnp.asarray(out.seed_slots.astype(np.int32)),
             seed_type=out.seed_type,
             num_sampled_nodes_dict=out.num_sampled_nodes,
-            num_sampled_edges_dict=out.num_sampled_edges, y=y)
-        if degraded is not None:
-            batch.extras["degraded"] = degraded
+            num_sampled_edges_dict=out.num_sampled_edges,
+            y=None if gather["y"] is None else jnp.asarray(gather["y"]))
+        if gather["degraded"] is not None:
+            batch.extras["degraded"] = {
+                t: jnp.asarray(m) for t, m in gather["degraded"].items()}
         if self.transform is not None:
             batch = self.transform(batch)
         return batch

@@ -2,25 +2,41 @@
 -> jit-ready mini-batch — the paper's three-component loading loop (C6).
 
 The loader is oblivious to the storage backends (swap InMemory for
-Partitioned without touching this file — the paper's plug-and-play claim)
-and emits **static-shape** batches so the jit'd step never recompiles.
-Batches are *jit-ready*: the producer path sorts the sampled COO by
-destination and pre-fills the ``EdgeIndex`` CSR/CSC caches host-side —
-plus, when Pallas dispatch is on, a static-layout blocked-ELL packing whose
-bucket shapes derive from the sampler's budgets, so per-batch edge indices
-passed as jit arguments take the Pallas SpMM path with a single compilation
-across batches. ``Batch`` is a registered pytree for exactly this reason.
-Supports externally-seeded iteration (training tables with per-seed
-timestamps + attached labels, the RDL workflow of §3.1) via ``transform``.
+Partitioned, Cached, Mmap or Resilient without touching this file — the
+paper's plug-and-play claim) and emits **static-shape** batches so the
+jit'd step never recompiles. Batches are *jit-ready*: the producer path
+sorts the sampled COO by destination and pre-fills the ``EdgeIndex``
+CSR/CSC caches host-side — plus, when Pallas dispatch is on, a
+static-layout blocked-ELL packing whose bucket shapes derive from the
+sampler's budgets, so per-batch edge indices passed as jit arguments take
+the Pallas SpMM path with a single compilation across batches. ``Batch``
+is a registered pytree for exactly this reason. Supports externally-seeded
+iteration (training tables with per-seed timestamps + attached labels, the
+RDL workflow of §3.1) via ``transform``.
+
+Out-of-core overlap: batch production decomposes into three stages —
+**sample** (graph-store walk, sequential so the sampler's seeded RNG draws
+in batch order), **gather** (feature-store fetch, the dominant latency
+against partitioned/remote/disk backends) and **pack** (host CSR/CSC/ELL
+packing + device put). With ``pipeline_depth > 1`` the producer keeps that
+many batches in flight on a small worker pool with *ordered reassembly*:
+batch ``i``'s gather hides behind the sampling and packing of batches
+``i+1..i+depth``, while consumers still see batches in exactly the
+sequential order (bit-identical in the fault-free case — the equivalence
+tests pin this down). ``partition_order=True`` additionally groups shuffled
+seeds by their home partition (discovered through the store chain's routing
+table) so each batch's gather touches fewer remote partitions.
 
 Fault tolerance: when the feature store is a
-``repro.data.resilience.ResilientFeatureStore`` the producer's gathers fan
-out per partition on its thread pool (retries + deadlines + circuit
-breakers behind the scenes) and each batch carries an
-``extras['degraded']`` row mask for features served from the stale cache;
-``on_batch_error="raise"|"retry"|"skip"`` decides what a batch-level store
-failure does, with every retry/skip/degraded row counted in the loader's
-``health`` dict. See the ROADMAP "Store failure handling" subsection.
+``repro.data.resilience.ResilientFeatureStore`` the gathers fan out per
+partition on its thread pool (retries + deadlines + circuit breakers behind
+the scenes) and each batch carries an ``extras['degraded']`` row mask for
+features served from the stale cache; ``on_batch_error="raise"|"retry"|
+"skip"`` decides what a batch-level store failure does — identically in the
+sequential and pipelined producers (a failed pipelined chain re-runs the
+remaining policy attempts in order at reassembly) — with every
+retry/skip/degraded row counted in the loader's ``health`` dict. See the
+ROADMAP "Store-backed loading pipeline" subsection.
 """
 
 from __future__ import annotations
@@ -28,6 +44,8 @@ from __future__ import annotations
 import dataclasses
 import queue
 import threading
+from collections import deque
+from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, List, Optional, Sequence
 
 import jax
@@ -37,7 +55,7 @@ import numpy as np
 from repro.core.edge_index import EdgeIndex
 from repro.data.feature_store import FeatureStore
 from repro.data.graph_store import DEFAULT_ETYPE, GraphStore
-from repro.data.resilience import StoreError
+from repro.data.resilience import StoreError, find_routed
 from repro.data.sampler import NeighborSampler, SamplerOutput
 from repro.kernels import use_pallas
 from repro.kernels.spmm.ops import ell_layout_from_bounds
@@ -92,17 +110,32 @@ _BATCH_ERROR_MODES = ("raise", "retry", "skip")
 
 
 class _PrefetchLoader:
-    """Seed-batching + producer-thread prefetch shared by both loaders.
+    """Seed-batching + pipelined/prefetch production shared by both loaders.
 
     Subclasses set ``input_nodes``, ``input_time``, ``batch_size``,
-    ``shuffle``, ``drop_last``, ``prefetch`` and ``rng`` in ``__init__`` and
-    implement ``_make_batch(seeds, seed_time)``; iteration (including the
-    double-buffered producer thread, exception propagation through the
-    queue, and reaping an abandoned producer) lives here once — the
-    homogeneous and heterogeneous loaders differ only in what a batch *is*.
+    ``shuffle``, ``drop_last``, ``prefetch``, ``pipeline_depth``,
+    ``partition_order`` and ``rng`` in ``__init__`` and implement the three
+    production stages:
+
+      * ``_stage_sample(seeds, seed_time)`` — graph-store sampling + any
+        shared shape/layout decisions. Always called sequentially in batch
+        order (the sampler's seeded RNG must draw deterministically), pure
+        numpy.
+      * ``_stage_gather(sample)`` — feature-store fetch for the sampled
+        nodes. The dominant latency against partitioned/remote/disk
+        stores; safe to run concurrently across batches, pure numpy.
+      * ``_stage_pack(sample, gather)`` — host ELL/CSR packing + device
+        put, assembling the final batch.
+
+    ``_make_batch`` composes the three, so the sequential path and the
+    policy retry loop re-run one chain. Iteration (the producer thread,
+    the stage pipeline with ordered reassembly, exception propagation
+    through the queue, and reaping of abandoned producers/workers) lives
+    here once — the homogeneous and heterogeneous loaders differ only in
+    what a batch *is*.
 
     Store failures (``repro.data.resilience.StoreError``) are policy, not
-    fate: ``on_batch_error`` picks what a failed ``_make_batch`` does —
+    fate: ``on_batch_error`` picks what a failed batch chain does —
     ``"raise"`` propagates immediately, ``"retry"`` re-samples/re-fetches
     the same seeds up to ``batch_retries`` times then raises, ``"skip"``
     retries then drops the batch and keeps the epoch going. Every decision
@@ -110,6 +143,9 @@ class _PrefetchLoader:
     skipped_batches, degraded_rows}); degraded rows are read off the
     batch's ``extras['degraded']`` mask (filled by the resilient feature
     store). Non-store exceptions always propagate — a bug is not a fault.
+    The pipelined producer applies the *same* policy with the same
+    counters: a chain that failed in flight consumed attempt 0, and the
+    remaining attempts re-run sequentially at its reassembly slot.
     """
 
     input_nodes: np.ndarray
@@ -118,13 +154,27 @@ class _PrefetchLoader:
     shuffle: bool
     drop_last: bool
     prefetch: int
+    pipeline_depth: int = 1
+    partition_order: bool = False
     rng: np.random.Generator
     on_batch_error: str = "raise"
     batch_retries: int = 2
 
+    # ---- the three production stages (subclass contract) ----
+    def _stage_sample(self, seeds: np.ndarray,
+                      seed_time: Optional[np.ndarray]):
+        raise NotImplementedError
+
+    def _stage_gather(self, sample):
+        raise NotImplementedError
+
+    def _stage_pack(self, sample, gather):
+        raise NotImplementedError
+
     def _make_batch(self, seeds: np.ndarray,
                     seed_time: Optional[np.ndarray]):
-        raise NotImplementedError
+        sample = self._stage_sample(seeds, seed_time)
+        return self._stage_pack(sample, self._stage_gather(sample))
 
     def _init_policy(self, on_batch_error: str, batch_retries: int):
         if on_batch_error not in _BATCH_ERROR_MODES:
@@ -135,6 +185,13 @@ class _PrefetchLoader:
         self.health = {"batches": 0, "batch_retries": 0,
                        "skipped_batches": 0, "degraded_rows": 0}
 
+    def _init_pipeline(self, pipeline_depth: int, partition_order: bool):
+        self.pipeline_depth = int(pipeline_depth)
+        if self.pipeline_depth < 0:
+            raise ValueError(
+                f"pipeline_depth must be >= 0, got {pipeline_depth}")
+        self.partition_order = bool(partition_order)
+
     @staticmethod
     def _degraded_count(batch) -> int:
         extras = getattr(batch, "extras", None)
@@ -144,8 +201,12 @@ class _PrefetchLoader:
         leaves = d.values() if isinstance(d, dict) else [d]
         return int(sum(int(np.asarray(m).sum()) for m in leaves))
 
+    def _count_success(self, batch) -> None:
+        self.health["batches"] += 1
+        self.health["degraded_rows"] += self._degraded_count(batch)
+
     def _make_batch_guarded(self, seeds, seed_time, abort=None):
-        """Apply ``on_batch_error`` around ``_make_batch``.
+        """Apply ``on_batch_error`` around the full batch chain.
 
         Returns the batch, or ``_SKIP`` when the policy drops it. ``abort``
         (the producer's abandonment flag) bounds how long a retry loop can
@@ -153,11 +214,27 @@ class _PrefetchLoader:
         """
         if not hasattr(self, "health"):
             self._init_policy(self.on_batch_error, self.batch_retries)
+        try:
+            batch = self._make_batch(seeds, seed_time)
+        except StoreError as exc:
+            return self._finish_policy(seeds, seed_time, exc, abort)
+        self._count_success(batch)
+        return batch
+
+    def _finish_policy(self, seeds, seed_time, first_exc, abort):
+        """Policy attempts 1..N after attempt 0 raised ``first_exc``.
+
+        Shared by the sequential path and the pipelined reassembly (where
+        attempt 0 ran — and failed — in flight on the worker pool). Health
+        accounting is identical either way.
+        """
         attempts = (1 if self.on_batch_error == "raise"
                     else 1 + self.batch_retries)
-        last = None
-        for attempt in range(attempts):
-            if abort is not None and abort() and attempt > 0:
+        last = first_exc
+        if attempts > 1:
+            self.health["batch_retries"] += 1
+        for attempt in range(1, attempts):
+            if abort is not None and abort():
                 break
             try:
                 batch = self._make_batch(seeds, seed_time)
@@ -166,18 +243,41 @@ class _PrefetchLoader:
                 if attempt + 1 < attempts:
                     self.health["batch_retries"] += 1
                 continue
-            self.health["batches"] += 1
-            self.health["degraded_rows"] += self._degraded_count(batch)
+            self._count_success(batch)
             return batch
         if self.on_batch_error == "skip":
             self.health["skipped_batches"] += 1
             return _SKIP
         raise last
 
+    # ---- seed batching ----
+    def _seed_route(self) -> Optional[np.ndarray]:
+        """Home partition of every *input node*, via the feature-store
+        chain's routing table (None when the chain doesn't route)."""
+        routed = find_routed(getattr(self, "fs", None))
+        if routed is None:
+            return None
+        route = getattr(routed, "_route", {}).get(self._seed_feature_key())
+        if route is None:
+            return None
+        return np.asarray(route)[self.input_nodes]
+
+    def _seed_feature_key(self):
+        """(group, attr) of the seed features (hetero overrides group)."""
+        return ("node", "x")
+
     def _seed_batches(self):
         order = np.arange(len(self.input_nodes))
         if self.shuffle:
             self.rng.shuffle(order)
+        if self.partition_order:
+            # group (shuffled) seeds by home partition: each batch's gather
+            # then touches one — or few — partitions, cutting the remote-row
+            # fraction. A stable sort keeps the shuffled order within each
+            # partition, so epochs stay randomised *inside* locality groups.
+            part = self._seed_route()
+            if part is not None:
+                order = order[np.argsort(part[order], kind="stable")]
         bs = self.batch_size
         for i in range(0, len(order) - (bs - 1 if self.drop_last else 0), bs):
             idx = order[i:i + bs]
@@ -186,15 +286,92 @@ class _PrefetchLoader:
             yield (self.input_nodes[idx],
                    None if self.input_time is None else self.input_time[idx])
 
-    def __iter__(self):
-        if self.prefetch <= 0:
-            for seeds, t in self._seed_batches():
-                batch = self._make_batch_guarded(seeds, t)
+    # ---- batch production (sequential or stage-pipelined) ----
+    def _produce(self, abort=None):
+        """Yield policy-guarded batches in seed-batch order."""
+        if not hasattr(self, "health"):
+            self._init_policy(self.on_batch_error, self.batch_retries)
+        if self.pipeline_depth > 1:
+            yield from self._produce_pipelined(abort)
+            return
+        for seeds, t in self._seed_batches():
+            if abort is not None and abort():
+                return
+            batch = self._make_batch_guarded(seeds, t, abort=abort)
+            if batch is not _SKIP:
+                yield batch
+
+    def _produce_pipelined(self, abort=None):
+        """Stage-pipelined production with ordered reassembly.
+
+        Sampling stays sequential on this thread (deterministic RNG draw
+        order); each sampled batch's *gather* is submitted to a bounded
+        worker pool, up to ``pipeline_depth`` gathers in flight. Gather is
+        the stage that blocks on the store (remote/disk I/O releases the
+        GIL), so batch ``i``'s fetch latency hides behind the sampling and
+        packing of its successors; packing stays on this thread at
+        reassembly time — host packing is CPU-bound and would only fight
+        the coordinator for the GIL on a worker, and coordinator packing
+        keeps device puts single-threaded and the in-memory fast path
+        overhead-free. Batches are yielded strictly in submission order,
+        so consumers see exactly the sequential sequence. A chain that
+        raises a ``StoreError`` re-enters the policy loop at its
+        reassembly slot (the in-flight run was attempt 0); non-store
+        errors propagate from the head slot in order. The pool is torn
+        down (and every worker joined) when the generator closes, however
+        early — abandonment cannot leak stage workers.
+        """
+        depth = self.pipeline_depth
+        pool = ThreadPoolExecutor(max_workers=depth,
+                                  thread_name_prefix="loader-stage")
+        inflight: deque = deque()  # (seeds, t, sample, Future | StoreError)
+        seed_iter = self._seed_batches()
+        exhausted = False
+        try:
+            while True:
+                while not exhausted and len(inflight) < depth:
+                    try:
+                        seeds, t = next(seed_iter)
+                    except StopIteration:
+                        exhausted = True
+                        break
+                    try:
+                        sample = self._stage_sample(seeds, t)
+                    except StoreError as exc:  # sampling itself can fetch
+                        inflight.append((seeds, t, None, exc))
+                    else:
+                        inflight.append((seeds, t, sample, pool.submit(
+                            self._stage_gather, sample)))
+                if not inflight:
+                    return
+                seeds, t, sample, head = inflight.popleft()
+                try:
+                    if isinstance(head, StoreError):
+                        raise head
+                    batch = self._stage_pack(sample, head.result())
+                except StoreError as exc:
+                    batch = self._finish_policy(seeds, t, exc, abort)
+                else:
+                    self._count_success(batch)
                 if batch is not _SKIP:
                     yield batch
+                if abort is not None and abort():
+                    return
+        finally:
+            pool.shutdown(wait=True, cancel_futures=True)
+
+    def __iter__(self):
+        if self.prefetch <= 0:
+            # inline production on the consumer thread; with
+            # pipeline_depth > 1 gathers still overlap on the worker pool
+            gen = self._produce()
+            try:
+                yield from gen
+            finally:
+                gen.close()  # deterministic worker-pool teardown
             return
-        # double-buffered host prefetch (the paper's multi-worker loading,
-        # adapted: vectorised sampling + a producer thread)
+        # bounded host prefetch: a producer thread runs the (sequential or
+        # pipelined) generator and feeds the consumer through a queue
         q: "queue.Queue" = queue.Queue(maxsize=self.prefetch)
         stop = object()
         abandoned = threading.Event()
@@ -202,20 +379,21 @@ class _PrefetchLoader:
         def producer():
             # A raised exception must reach the consumer: swallowing it here
             # would never enqueue the sentinel and deadlock `q.get()`.
+            gen = self._produce(abort=abandoned.is_set)
             try:
-                for seeds, t in self._seed_batches():
+                for batch in gen:
                     if abandoned.is_set():
                         return
-                    batch = self._make_batch_guarded(
-                        seeds, t, abort=abandoned.is_set)
-                    if batch is not _SKIP:
-                        q.put(batch)
+                    q.put(batch)
             except BaseException as exc:  # noqa: BLE001 - re-raised below
                 q.put(exc)
                 return
+            finally:
+                gen.close()  # reap stage workers even on abandonment
             q.put(stop)
 
-        th = threading.Thread(target=producer, daemon=True)
+        th = threading.Thread(target=producer, daemon=True,
+                              name="loader-producer")
         th.start()
         try:
             while True:
@@ -252,11 +430,14 @@ class NeighborLoader(_PrefetchLoader):
                  temporal_strategy: str = "uniform",
                  transform: Optional[Callable[[Batch], Batch]] = None,
                  shuffle: bool = False, drop_last: bool = True,
-                 prefetch: int = 0, prefill_ell: Optional[bool] = None,
+                 prefetch: int = 0, pipeline_depth: int = 1,
+                 partition_order: bool = False,
+                 prefill_ell: Optional[bool] = None,
                  on_batch_error: str = "raise", batch_retries: int = 2,
                  seed: int = 0):
         self.fs = feature_store
         self._init_policy(on_batch_error, batch_retries)
+        self._init_pipeline(pipeline_depth, partition_order)
         self.sampler = NeighborSampler(
             graph_store, num_neighbors, edge_type=edge_type,
             disjoint=disjoint, temporal_strategy=temporal_strategy, seed=seed)
@@ -285,9 +466,21 @@ class NeighborLoader(_PrefetchLoader):
                 self.sampler.slot_degree_bounds(num_seeds))
         return self._ell_layouts[num_seeds]
 
-    def _make_batch(self, seeds: np.ndarray,
-                    seed_time: Optional[np.ndarray]) -> Batch:
+    # ---- stages ----
+    def _stage_sample(self, seeds: np.ndarray,
+                      seed_time: Optional[np.ndarray]):
+        """Sequential: sampler RNG draws + the (cached) shared ELL layout
+        decision both happen in batch order on one thread."""
         out: SamplerOutput = self.sampler.sample(seeds, seed_time)
+        fill_ell = (use_pallas() if self.prefill_ell is None
+                    else self.prefill_ell)
+        layout = self._ell_layout_for(len(seeds)) if fill_ell else None
+        return {"seeds": seeds, "out": out, "layout": layout,
+                "fill_ell": fill_ell}
+
+    def _stage_gather(self, sample):
+        """Feature (+ label) fetch — the latency this pipeline hides."""
+        out: SamplerOutput = sample["out"]
         fetch = getattr(self.fs, "get_padded_resilient", None)
         degraded = None
         if fetch is not None:  # resilient store: degraded-row mask surfaced
@@ -297,25 +490,30 @@ class NeighborLoader(_PrefetchLoader):
         y = None
         if self.labels_attr is not None:
             try:
-                y = jnp.asarray(self.fs.get_tensor(
-                    group="node", attr=self.labels_attr, index=seeds))
+                y = self.fs.get_tensor(
+                    group="node", attr=self.labels_attr,
+                    index=sample["seeds"])
             except KeyError:
                 y = None
+        return {"x": x, "y": y, "degraded": degraded}
+
+    def _stage_pack(self, sample, gather) -> Batch:
+        """Host ELL/CSR packing + device put -> the jit-ready batch."""
+        out: SamplerOutput = sample["out"]
         n_slots = len(out.node)
-        fill_ell = (use_pallas() if self.prefill_ell is None
-                    else self.prefill_ell)
         ei = EdgeIndex.from_coo_prefilled(
             out.row, out.col, n_slots, n_slots,
-            ell_layout=self._ell_layout_for(len(seeds)) if fill_ell else None)
+            ell_layout=sample["layout"] if sample["fill_ell"] else None)
         batch = Batch(
-            x=jnp.asarray(x), edge_index=ei,
+            x=jnp.asarray(gather["x"]), edge_index=ei,
             n_id=jnp.asarray(out.node), e_id=jnp.asarray(out.edge),
             seed_slots=jnp.asarray(out.seed_slots.astype(np.int32)),
             num_sampled_nodes=out.num_sampled_nodes,
             num_sampled_edges=out.num_sampled_edges,
-            y=y, edge_mask=jnp.asarray((out.edge >= 0)))
-        if degraded is not None:
-            batch.extras["degraded"] = jnp.asarray(degraded)
+            y=None if gather["y"] is None else jnp.asarray(gather["y"]),
+            edge_mask=jnp.asarray((out.edge >= 0)))
+        if gather["degraded"] is not None:
+            batch.extras["degraded"] = jnp.asarray(gather["degraded"])
         if self.transform is not None:
             batch = self.transform(batch)
         return batch

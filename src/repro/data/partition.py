@@ -6,6 +6,14 @@ Two partitioners:
     random roots along edges, which concentrates neighborhoods within a
     partition and cuts remote feature fetches for neighbor sampling.
 
+The BFS grower is fully vectorised: each region expands a whole frontier at
+a time with numpy gathers (degree-repeat + first-occurrence dedup), and root
+selection advances a single pointer over the seeded permutation — no
+per-node Python queue, no root rescans. The assignment is bit-identical to
+the original FIFO/deque formulation for a given seed (the frontier order
+*is* the queue's first-occurrence pop order), which the parity test in
+``tests/test_store_pipeline.py`` pins down.
+
 ``build_partitioned_stores`` wires a PartitionedFeatureStore so the
 NeighborLoader runs *unchanged* on top of partitioned storage — the paper's
 separation-of-concerns claim, measured by ``benchmarks/store_scaling.py``.
@@ -21,42 +29,72 @@ from repro.data.feature_store import PartitionedFeatureStore
 from repro.data.graph_store import InMemoryGraphStore
 
 
-def partition_graph(num_nodes: int, edge_index: np.ndarray, num_parts: int,
-                    method: str = "bfs", seed: int = 0) -> np.ndarray:
-    """node -> partition id."""
-    if method == "hash":
-        return np.arange(num_nodes) % num_parts
-    rng = np.random.default_rng(seed)
+def _undirected_csr(num_nodes: int, edge_index: np.ndarray
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Symmetrised adjacency as (indptr, neighbors) for region growing."""
     src, dst = np.asarray(edge_index[0]), np.asarray(edge_index[1])
-    # undirected adjacency for region growing
     s2 = np.concatenate([src, dst])
     d2 = np.concatenate([dst, src])
     order = np.argsort(s2, kind="stable")
     src_s, dst_s = s2[order], d2[order]
     indptr = np.searchsorted(src_s, np.arange(num_nodes + 1))
+    return indptr, dst_s
+
+
+def _frontier_neighbors(indptr: np.ndarray, nbrs: np.ndarray,
+                        frontier: np.ndarray) -> np.ndarray:
+    """All neighbors of ``frontier`` concatenated in adjacency order.
+
+    Vectorised ragged gather: each frontier node contributes its CSR
+    segment, in frontier order — exactly the order a FIFO queue would pop
+    them in.
+    """
+    deg = indptr[frontier + 1] - indptr[frontier]
+    total = int(deg.sum())
+    if total == 0:
+        return np.empty(0, np.int64)
+    starts = np.repeat(indptr[frontier], deg)
+    prefix = np.repeat(np.cumsum(deg) - deg, deg)
+    return nbrs[starts + np.arange(total) - prefix]
+
+
+def partition_graph(num_nodes: int, edge_index: np.ndarray, num_parts: int,
+                    method: str = "bfs", seed: int = 0) -> np.ndarray:
+    """node -> partition id."""
+    if method == "hash":
+        return np.arange(num_nodes) % num_parts
+    if method != "bfs":
+        raise ValueError(f"unknown partition method {method!r}")
+    rng = np.random.default_rng(seed)
+    indptr, nbrs = _undirected_csr(num_nodes, edge_index)
     part = np.full(num_nodes, -1, np.int64)
     target = -(-num_nodes // num_parts)
     perm = rng.permutation(num_nodes)
-    root_iter = iter(perm)
-    from collections import deque
+    ptr = 0  # next unconsumed root candidate in the seeded permutation
     for p in range(num_parts):
-        # grow one contiguous BFS region until it reaches the target size
         count = 0
-        queue: deque = deque()
+        frontier = np.empty(0, np.int64)
         while count < target:
-            if not queue:
-                root = next((r for r in root_iter if part[r] < 0), None)
-                if root is None:
+            if frontier.size == 0:
+                while ptr < num_nodes and part[perm[ptr]] >= 0:
+                    ptr += 1
+                if ptr == num_nodes:
                     break
-                queue.append(int(root))
-            v = queue.popleft()
-            if part[v] >= 0:
-                continue
-            part[v] = p
-            count += 1
-            for u in dst_s[indptr[v]:indptr[v + 1]]:
-                if part[u] < 0:
-                    queue.append(int(u))
+                frontier = perm[ptr:ptr + 1]
+                ptr += 1
+            # assign up to the region's remaining capacity in frontier
+            # (= FIFO pop) order; a mid-frontier cutoff drops the tail,
+            # matching the queue being discarded at target size
+            take = min(target - count, len(frontier))
+            part[frontier[:take]] = p
+            count += take
+            if count >= target:
+                break
+            grown = _frontier_neighbors(indptr, nbrs, frontier)
+            grown = grown[part[grown] < 0]
+            # first-occurrence dedup keeps FIFO discovery order
+            _, first = np.unique(grown, return_index=True)
+            frontier = grown[np.sort(first)]
     part[part < 0] = num_parts - 1
     return part
 

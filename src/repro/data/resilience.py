@@ -27,6 +27,14 @@ Fetch dispatch: fetch -> retry (transient) -> breaker (consecutive
 failures) -> stale-cache degrade (rows homed on the tripped partition) ->
 loader-level skip/raise (``_PrefetchLoader.on_batch_error``). See
 ROADMAP.md "Store failure handling".
+
+The last-known-good ``_RowCache`` here is a *failure* cache: it is
+consulted only when a partition is down, and a row served from it is
+flagged degraded. The cross-batch hot-feature cache
+(``feature_store.CachedFeatureStore``) is the *traffic* twin: it serves on
+every hit and never changes failure semantics. They compose — wrap the hot
+cache inside the resilient store and healthy hits skip the remote fetch
+while failures still degrade gracefully.
 """
 
 from __future__ import annotations
@@ -201,14 +209,23 @@ def _fresh_health() -> Dict[str, int]:
             "stale_rows": 0}
 
 
-def _find_routed(store):
-    """Walk the ``.inner`` chain to the partition-routing backend, if any."""
+def find_routed(store):
+    """Walk the ``.inner`` chain to the partition-routing backend, if any.
+
+    The wrapper chain is compositional (``Resilient(Cached(Chaos(
+    Partitioned)))`` and friends): the resilient fan-out, the chaos
+    injector's per-partition streams, and the loader's partition-aware
+    seed ordering all discover the routing table through this one walk.
+    """
     s = store
     while s is not None:
         if hasattr(s, "_route") and hasattr(s, "num_parts"):
             return s
         s = getattr(s, "inner", None)
     return None
+
+
+_find_routed = find_routed  # backwards-compatible private alias
 
 
 class _RowCache:
