@@ -1,6 +1,6 @@
 """Fast-path audit cell: static proof the bench steps ride Pallas (PR 7).
 
-Re-derives the four jit'd step cells of ``spmm_bench`` at small shapes and,
+Re-derives the jit'd step cells of ``spmm_bench`` at small shapes and,
 instead of timing them, *audits* them: each step's closed jaxpr is walked by
 ``repro.analysis.dispatch`` (zero ``repro_oracle:*`` eqns, the expected
 kernels launched), costed by ``repro.launch.jaxpr_stats`` (pallas FLOPs),
@@ -182,6 +182,26 @@ def run(out_path: str = "BENCH_spmm.json") -> None:
         audits["hetero_step"] = _audit_cell(
             "hetero_step", hetero_step, hparams, hbatches,
             expect_kernels=("_spmm_ell_kernel", "_gmm_kernel"))
+
+    # -- hgt_step: typed carry-mode attention + grouped K/Q/V --------------
+    from repro.core.hetero import hgt
+
+    hgt_net = hgt((["user", "item"], list(fan)), [feat, hidden, hidden],
+                  heads=4)
+    hgt_params = hgt_net.init(jax.random.PRNGKey(0))
+
+    def hgt_step(p, batch):
+        def loss_fn(p):
+            out = hgt_net.apply(p, batch.x_dict, batch.edge_index_dict,
+                                batch.num_nodes_dict)
+            return (batch.seed_output(out) ** 2).mean()
+
+        return jax.value_and_grad(loss_fn)(p)
+
+    with _forced_env("1"):
+        audits["hgt_step"] = _audit_cell(
+            "hgt_step", hgt_step, hgt_params, hbatches,
+            expect_kernels=("_attn_ell_kernel", "_gmm_kernel"))
 
     headroom = budget_headroom_summary(feat=feat)
     rec = {

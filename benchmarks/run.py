@@ -28,6 +28,7 @@ def main() -> None:
         ("spmm_train_step", spmm_bench.run_train_step),
         ("spmm_hetero_step", spmm_bench.run_hetero_step),
         ("spmm_gat_step", spmm_bench.run_gat_step),
+        ("spmm_hgt_step", spmm_bench.run_hgt_step),
         ("fastpath_audit", fastpath_audit.run),
         ("explainer_fidelity", explainer_fidelity.run),
         ("chaos_recovery", chaos_recovery.run),

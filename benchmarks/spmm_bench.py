@@ -552,9 +552,130 @@ def run_gat_step(out_path: str = "BENCH_spmm.json") -> None:
     append_cell(out_path, rec)
 
 
+def run_hgt_step(out_path: str = "BENCH_spmm.json") -> None:
+    """Typed-attention (HGT) loader-fed jit'd train-step cell (this PR).
+
+    A ``HeteroNeighborLoader`` batch (per-relation host-prefilled static
+    ELL caches) drives a jit'd ``value_and_grad`` step of a 2-layer
+    ``hgt()`` graph-transformer stack twice: once on the COO carry oracle
+    (cache-less EdgeIndexes, ``REPRO_USE_PALLAS=0`` at trace) and once on
+    the fused typed-attention kernel path — one carry-mode launch per
+    relation per layer, per-destination-type ``merge_carries`` cross-type
+    softmax, grouped-matmul K/Q/V. Verifies gradient parity and ONE trace
+    per variant across batches, then times both. Off-TPU the kernel runs
+    in interpret mode (``step_grad_kernel_interpret_us``, small cell).
+    Appends an ``hgt_step`` record to ``BENCH_spmm.json``.
+    """
+    import time
+
+    from repro.core.edge_index import EdgeIndex
+    from repro.core.hetero import hgt
+    from repro.data.data import HeteroData
+    from repro.data.hetero_sampler import HeteroNeighborLoader
+
+    on_tpu = jax.default_backend() == "tpu"
+    rng = np.random.default_rng(23)
+    feat, hidden, heads = 32, 32, 4
+    if on_tpu:
+        n_user, n_item, e = 2048, 4096, 32768
+        batch_size, fan_depth = 32, [8, 4]
+    else:
+        n_user, n_item, e = 256, 512, 2048
+        batch_size, fan_depth = 8, [4, 2]
+    fan = {("user", "buys", "item"): fan_depth,
+           ("item", "rev_buys", "user"): fan_depth}
+    hd = HeteroData()
+    hd.add_nodes("user", rng.standard_normal((n_user, feat)).astype(
+        np.float32))
+    hd.add_nodes("item", rng.standard_normal((n_item, feat)).astype(
+        np.float32))
+    ub = np.stack([rng.integers(0, n_user, e), rng.integers(0, n_item, e)])
+    hd.add_edges(("user", "buys", "item"), ub)
+    hd.add_edges(("item", "rev_buys", "user"), ub[::-1])
+    metadata = (["user", "item"], list(fan))
+
+    loader = HeteroNeighborLoader(
+        hd, hd, num_neighbors=fan, input_type="item",
+        input_nodes=np.arange(n_item), batch_size=batch_size, shuffle=True,
+        prefill_ell=True, pipeline_depth=2, prefetch=2, seed=0)
+    net = hgt(metadata, [feat, hidden, hidden], heads=heads)
+    params = net.init(jax.random.PRNGKey(0))
+    sentinel = RetraceSentinel(budget=1)
+
+    # hgt dispatches through use_pallas(); flip the env var around each
+    # variant's trace — the compiled artifacts keep their path afterwards.
+    def make_step(use_pallas_env: str, tag: str):
+        @jax.jit
+        def step(params, batch):
+            def loss_fn(p):
+                eid = batch.edge_index_dict
+                if use_pallas_env != "1":  # cache-less -> COO carry oracle
+                    eid = {et: EdgeIndex(ei.data, ei.num_src_nodes,
+                                         ei.num_dst_nodes)
+                           for et, ei in eid.items()}
+                out = net.apply(p, batch.x_dict, eid, batch.num_nodes_dict)
+                return (batch.seed_output(out) ** 2).mean()
+
+            return jax.value_and_grad(loss_fn)(params)
+
+        return sentinel.wrap(step, name=tag)
+
+    it = iter(loader)
+    batches = [next(it) for _ in range(4)]
+
+    prev = os.environ.get("REPRO_USE_PALLAS")
+    try:
+        os.environ["REPRO_USE_PALLAS"] = "0"
+        step_oracle = make_step("0", "oracle")
+        lo, go = step_oracle(params, batches[0])
+        os.environ["REPRO_USE_PALLAS"] = "1"
+        step_kernel = make_step("1", "kernel")
+        lk, gk = step_kernel(params, batches[0])
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_USE_PALLAS", None)
+        else:
+            os.environ["REPRO_USE_PALLAS"] = prev
+    lo.block_until_ready(), lk.block_until_ready()
+    diffs = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.abs(a - b).max()), go, gk)
+    max_diff = max(jax.tree_util.tree_leaves(diffs))
+    assert max_diff < 1e-5, f"fused HGT grad != oracle grad: {max_diff}"
+
+    def time_over_batches(fn, rounds: int = 3):
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            for b in batches:
+                fn(params, b)[0].block_until_ready()
+        return (time.perf_counter() - t0) / (rounds * len(batches)) * 1e6
+
+    oracle_us = time_over_batches(step_oracle)
+    kernel_us = time_over_batches(step_kernel)
+    sentinel.check()  # 1 signature per step fn, or raise with a diff
+
+    key = "step_grad_kernel_us" if on_tpu else "step_grad_kernel_interpret_us"
+    rec = {
+        "cell": "hgt_step",
+        "backend": jax.default_backend(),
+        "n_user": n_user, "n_item": n_item, "edges_per_type": e,
+        "feat": feat, "heads": heads, "batch_size": batch_size,
+        "fanouts": fan_depth,
+        "step_grad_oracle_us": oracle_us,
+        key: kernel_us,
+        "trace_count_oracle": sentinel.count("oracle"),
+        "trace_count_kernel": sentinel.count("kernel"),
+        "grad_max_abs_diff": max_diff,
+    }
+    emit("spmm/hgt_step/grad_oracle_us", oracle_us)
+    emit(f"spmm/hgt_step/{key.removeprefix('step_')}", kernel_us,
+         f"grad_max_abs_diff={max_diff:.2e}")
+    append_cell(out_path, rec)
+
+
 if __name__ == "__main__":
     run()
     run_loader_step()
     run_train_step()
     run_hetero_step()
     run_gat_step()
+    run_hgt_step()

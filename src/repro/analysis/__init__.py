@@ -12,7 +12,8 @@ Four passes, one import surface:
     (``python -m repro.analysis`` runs them over ``src/``).
 """
 
-from repro.analysis.budgets import (BudgetError, budget_headroom_summary,
+from repro.analysis.budgets import (BudgetError, attn_grid_report,
+                                    budget_headroom_summary,
                                     ell_layout_report, gat_grid_report,
                                     gmm_tiling_report)
 from repro.analysis.dispatch import (DispatchReport, audit_jaxpr,
@@ -23,8 +24,8 @@ from repro.analysis.retrace import (RetraceError, RetraceSentinel,
                                     cache_size)
 
 __all__ = [
-    "BudgetError", "budget_headroom_summary", "ell_layout_report",
-    "gat_grid_report", "gmm_tiling_report", "DispatchReport", "audit_jaxpr",
+    "BudgetError", "attn_grid_report", "budget_headroom_summary",
+    "ell_layout_report", "gat_grid_report", "gmm_tiling_report", "DispatchReport", "audit_jaxpr",
     "audit_report", "Finding", "check_pytree_roundtrips", "lint_source",
     "lint_tree", "run_all", "RetraceError", "RetraceSentinel", "cache_size",
 ]

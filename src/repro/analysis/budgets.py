@@ -75,6 +75,29 @@ def gat_grid_report(rows: int, k: int, heads: int, feat: int, *,
             **_headroom(usage)}
 
 
+def attn_grid_report(rows: int, k: int, heads: int, feat: int, *,
+                     logit_dim: int = 1, block_rows: int = hw.DEFAULT_BR,
+                     weighted: bool = False, carry: bool = True
+                     ) -> Dict[str, Any]:
+    """One typed-attention bucket's launch accounting (strict).
+
+    Generalises :func:`gat_grid_report` to the carry-mode launch shape:
+    ``logit_dim`` widens the alpha operands per head (the dot logit's head
+    dim), ``carry=True`` adds the ``(1, H)`` prior row and the per-block
+    ``m``/``l`` carry outputs. Raises :class:`BudgetError` when the shape
+    is unservable — the same check the packer runs at pack time.
+    """
+    hw.check_attn_bucket(rows, k, heads, feat, logit_dim=logit_dim,
+                         block_rows=block_rows, weighted=weighted,
+                         carry=carry)
+    usage = hw.attn_launch_usage(rows, k, heads, feat, logit_dim=logit_dim,
+                                 block_rows=block_rows, weighted=weighted,
+                                 carry=carry)
+    return {"rows": rows, "k": k, "heads": heads, "feat": feat,
+            "logit_dim": logit_dim, "carry": carry, **usage,
+            **_headroom(usage)}
+
+
 def gmm_tiling_report(k_dim: int, *, block: Tuple[int, int, int] = hw.GMM_BLOCK
                       ) -> Dict[str, Any]:
     """Grouped-matmul grid-step accounting (the MXU tile working set)."""
@@ -106,6 +129,12 @@ def budget_headroom_summary(layouts: Optional[Sequence[
         recs.append({**usage, **_headroom(usage)})
     gat = hw.gat_launch_usage(hw.DEFAULT_BR, hw.DEFAULT_BR * 2, heads, feat)
     recs.append({**gat, **_headroom(gat)})
+    # typed-attention working point: carry-mode launch with the dot logit's
+    # head-dim-wide alpha operands (the HGT shape at this feat/heads)
+    attn = hw.attn_launch_usage(hw.DEFAULT_BR, hw.DEFAULT_BR * 2, heads,
+                                feat, logit_dim=max(feat // heads, 1),
+                                carry=True)
+    recs.append({**attn, **_headroom(attn)})
     gmm = hw.gmm_launch_usage(feat)
     recs.append({**gmm, **_headroom(gmm)})
     return {

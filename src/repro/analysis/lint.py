@@ -3,12 +3,16 @@
 Four rules, each encoding an invariant the stack's correctness rests on:
 
   * **raw-kernel-entry** — the forward-only Pallas entry points
-    (``spmm_ell_pallas``, ``gat_ell_pallas``, ``grouped_matmul_pallas``,
-    ``segment_softmax_pallas``, ``flash_attention_pallas``) may only be
-    called from inside their own kernel package (its ``ops.py`` wrapper is
-    the differentiable, budget-checked public surface). A call anywhere
-    else bypasses the custom VJP, the SMEM chunking, and the budget
-    validation at once.
+    (``spmm_ell_pallas``, ``gat_ell_pallas``, ``attn_ell_pallas``,
+    ``grouped_matmul_pallas``, ``segment_softmax_pallas``,
+    ``flash_attention_pallas``) may only be called from inside their own
+    kernel package (its ``ops.py`` wrapper is the differentiable,
+    budget-checked public surface). A call anywhere else bypasses the
+    custom VJP, the SMEM chunking, and the budget validation at once.
+    The rule is also *generic*: ANY call named ``*_pallas`` that is not a
+    registered entry (or the ``use_pallas``/``forward_only_pallas``
+    helpers) must live inside ``repro/kernels/`` — a new raw entry is
+    package-private until it is registered here with its owning package.
   * **injectable-clock-rng** — the deterministic host paths
     (``data/resilience.py`` fault handling, ``data/loader.py`` batch
     production, ``data/feature_store.py`` cache eviction,
@@ -44,10 +48,14 @@ from typing import Dict, List, Optional, Set, Tuple
 RAW_KERNEL_ENTRIES: Dict[str, str] = {
     "spmm_ell_pallas": "repro/kernels/spmm/",
     "gat_ell_pallas": "repro/kernels/attention/",
+    "attn_ell_pallas": "repro/kernels/attention/",
     "grouped_matmul_pallas": "repro/kernels/grouped_matmul/",
     "segment_softmax_pallas": "repro/kernels/segment_softmax/",
     "flash_attention_pallas": "repro/kernels/flash_attention/",
 }
+
+# ``*_pallas`` callables that are NOT raw kernel entries (dispatch helpers).
+PALLAS_CALL_ALLOWLIST: Set[str] = {"use_pallas", "forward_only_pallas"}
 
 # path suffix -> function names that must stay jnp/jax-free (producer-thread
 # host packing: shape decisions and table packing, pure numpy by contract).
@@ -136,6 +144,16 @@ def _lint_raw_kernel_entries(path: str, tree: ast.AST) -> List[Finding]:
                 path, node.lineno, "raw-kernel-entry",
                 f"{name} is a forward-only raw kernel entry; call the "
                 f"differentiable wrapper in {allowed}ops.py instead"))
+        elif (name and name.endswith("_pallas")
+              and name not in RAW_KERNEL_ENTRIES
+              and name not in PALLAS_CALL_ALLOWLIST
+              and "repro/kernels/" not in posix):
+            findings.append(Finding(
+                path, node.lineno, "raw-kernel-entry",
+                f"{name} looks like an unregistered raw Pallas entry; raw "
+                f"entries are package-private to repro/kernels/ — expose a "
+                f"differentiable ops.py wrapper and register the entry in "
+                f"RAW_KERNEL_ENTRIES"))
     return findings
 
 

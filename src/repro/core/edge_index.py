@@ -341,22 +341,34 @@ class EdgeIndex:
     # ------------------------------------------------------------------ attend
     def attend(self, z: jnp.ndarray, alpha_src: jnp.ndarray,
                alpha_dst: jnp.ndarray, *, negative_slope: float = 0.2,
+               logit=None, prior: Optional[jnp.ndarray] = None,
                edge_weight: Optional[jnp.ndarray] = None,
                transpose: bool = False, return_attention: bool = False,
+               return_carry: bool = False,
                force_pallas: Optional[bool] = None,
                interpret: Optional[bool] = None):
-        """Attention-weighted aggregation (GAT semantics) over A (or A^T).
+        """Attention-weighted aggregation over A (or A^T), typed logits.
 
-        ``out[i] = sum_j softmax_j(leaky_relu(alpha_src[j] + alpha_dst[i]))
-        * w_ij * z[j]`` with ``z`` of shape (N, H, F) and the alpha halves
-        dense per-node (N, H) vectors — ``alpha_src`` keyed by the *message
-        sender* nodes (gathered through the neighbor table), ``alpha_dst``
-        by the receivers (the table's rows). For ``transpose=True`` the
-        roles ride the CSR-derived transpose table, so the caller passes
-        the halves already swapped into sender/receiver position.
+        ``out[i] = sum_j softmax_j(logit(j, i)) * w_ij * z[j]`` with ``z``
+        of shape (N, H, F) and the logit operands dense per-node arrays —
+        ``alpha_src`` keyed by the *message sender* nodes (gathered through
+        the neighbor table), ``alpha_dst`` by the receivers (the table's
+        rows). For ``transpose=True`` the roles ride the CSR-derived
+        transpose table, so the caller passes the halves already swapped
+        into sender/receiver position.
+
+        ``logit`` selects the per-relation transform: ``None`` (the default)
+        or :class:`~repro.kernels.attention.ops.AdditiveLogit` is GAT's
+        additive leaky-relu over (N, H) halves (``negative_slope`` only
+        applies here, back-compat); :class:`DotLogit` is the scaled dot
+        product over (N, H, D) halves with an optional per-head ``prior``
+        (HGT's ``mu[rel]``). ``return_carry=True`` skips the softmax divide
+        and returns the :class:`SoftmaxCarry` ``(m, l, acc)`` instead, so
+        several relations' carries merge into one cross-type softmax
+        (``merge_carries`` + ``finalize_carry``).
 
         Mirrors :meth:`matmul`'s dispatch tree: with a (loader-prefilled or
-        demand-filled) ELL cache and Pallas dispatch on, the fused flash-GAT
+        demand-filled) ELL cache and Pallas dispatch on, the fused flash
         kernel runs one launch per bucket (differentiable via the ops-level
         custom VJP — no ``(E, H, F)`` edge-message materialisation);
         otherwise — CPU/GPU, or tracing without a packed cache — the COO
@@ -371,26 +383,98 @@ class EdgeIndex:
         from repro.kernels.attention import ref as attn_ref
         num_rows = self.num_src_nodes if transpose else self.num_dst_nodes
         take_pallas = use_pallas() if force_pallas is None else force_pallas
+        additive = logit is None or isinstance(logit, attn_ops.AdditiveLogit)
+        if additive and not return_carry:
+            # GAT fast path — byte-identical to the pre-typed-logit code.
+            if logit is not None:
+                negative_slope = logit.negative_slope
+            if take_pallas:
+                ell = self.get_ell(transpose=transpose)
+                if ell is not None:
+                    out = attn_ops.gat_attend_ell(
+                        ell, alpha_src, alpha_dst, z, edge_weight,
+                        num_rows=num_rows, negative_slope=negative_slope,
+                        force_pallas=take_pallas, interpret=interpret)
+                    if not return_attention:
+                        return out
+                    alpha = attn_ops.gat_alpha_ell(
+                        ell, alpha_src, alpha_dst,
+                        num_edges=self.num_edges,
+                        negative_slope=negative_slope)
+                    return out, alpha
+            # COO oracle: CPU/GPU dispatch, or tracing w/o a packed cache.
+            send, recv = (self.dst, self.src) if transpose else (self.src,
+                                                                 self.dst)
+            out, alpha = attn_ref.gat_attend_coo(
+                send, recv, alpha_src, alpha_dst, z, num_rows=num_rows,
+                negative_slope=negative_slope, edge_weight=edge_weight)
+            return (out, alpha) if return_attention else out
+        # Typed / carry path.
+        spec = attn_ops.AdditiveLogit(negative_slope) if logit is None \
+            else logit
+        carry = None
         if take_pallas:
             ell = self.get_ell(transpose=transpose)
             if ell is not None:
-                out = attn_ops.gat_attend_ell(
+                carry = attn_ops.attn_carry_ell(
                     ell, alpha_src, alpha_dst, z, edge_weight,
-                    num_rows=num_rows, negative_slope=negative_slope,
+                    num_rows=num_rows, logit=spec, prior=prior,
                     force_pallas=take_pallas, interpret=interpret)
-                if not return_attention:
-                    return out
-                alpha = attn_ops.gat_alpha_ell(
-                    ell, alpha_src, alpha_dst, num_edges=self.num_edges,
-                    negative_slope=negative_slope)
-                return out, alpha
-        # COO oracle: CPU/GPU dispatch, or tracing without a packed cache.
+        if carry is None:
+            send, recv = (self.dst, self.src) if transpose else (self.src,
+                                                                 self.dst)
+            a_s = alpha_src[..., None] if alpha_src.ndim == 2 else alpha_src
+            a_d = alpha_dst[..., None] if alpha_dst.ndim == 2 else alpha_dst
+            m, lsum, acc = attn_ref.attn_carry_coo(
+                send, recv, a_s, a_d, z, num_rows=num_rows,
+                logit_kind=attn_ops._logit_kind(spec),
+                negative_slope=attn_ops._logit_slope(spec),
+                prior=attn_ops._effective_prior(spec, prior, z.shape[1])
+                if attn_ops._logit_kind(spec) == "dot" else None,
+                edge_weight=edge_weight)
+            carry = attn_ops.SoftmaxCarry(m, lsum, acc)
+        if return_carry:
+            return carry
+        out = attn_ops.finalize_carry(carry, z.dtype)
+        if return_attention:
+            alpha = self.attend_alpha(
+                alpha_src, alpha_dst, logit=spec, prior=prior,
+                m=carry.m, l=carry.l, transpose=transpose,
+                force_pallas=force_pallas)
+            return out, alpha
+        return out
+
+    def attend_alpha(self, alpha_src: jnp.ndarray, alpha_dst: jnp.ndarray,
+                     *, logit, prior: Optional[jnp.ndarray] = None,
+                     m: jnp.ndarray, l: jnp.ndarray,
+                     transpose: bool = False,
+                     force_pallas: Optional[bool] = None) -> jnp.ndarray:
+        """Per-edge attention (E, H) of this relation against *merged*
+        softmax statistics ``(m, l)`` (from :meth:`attend`'s carry /
+        ``merge_carries``) — the typed ``return_attention`` round trip.
+        With a packed ELL cache the panels scatter through the COO-keyed
+        ``ell_pos``; otherwise the COO fallback materialises the logits.
+        """
+        from repro.kernels import use_pallas
+        from repro.kernels.attention import ops as attn_ops
+        from repro.kernels.attention import ref as attn_ref
+        take_pallas = use_pallas() if force_pallas is None else force_pallas
+        ell = self.get_ell(transpose=transpose) if take_pallas else None
+        if ell is not None:
+            return attn_ops.attn_alpha_ell(
+                ell, alpha_src, alpha_dst, num_edges=self.num_edges,
+                logit=logit, prior=prior, m=m, l=l)
         send, recv = (self.dst, self.src) if transpose else (self.src,
                                                              self.dst)
-        out, alpha = attn_ref.gat_attend_coo(
-            send, recv, alpha_src, alpha_dst, z, num_rows=num_rows,
-            negative_slope=negative_slope, edge_weight=edge_weight)
-        return (out, alpha) if return_attention else out
+        a_s = alpha_src[..., None] if alpha_src.ndim == 2 else alpha_src
+        a_d = alpha_dst[..., None] if alpha_dst.ndim == 2 else alpha_dst
+        kind = attn_ops._logit_kind(logit)
+        heads = m.shape[1]
+        return attn_ref.attn_alpha_coo(
+            send, recv, a_s, a_d, m=m, l=l, logit_kind=kind,
+            negative_slope=attn_ops._logit_slope(logit),
+            prior=attn_ops._effective_prior(logit, prior, heads)
+            if kind == "dot" else None)
 
     # ------------------------------------------------------------------ utility
     def to_undirected(self) -> "EdgeIndex":

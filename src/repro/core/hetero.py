@@ -23,8 +23,13 @@ so they skip the grouped-projection path — but each relation's bipartite
 (``EdgeIndex.attend`` over the loader-prefilled per-relation ELL caches),
 so a hetero GAT keeps every relation on the Pallas fast path.
 
-``GroupedLinear`` exposes the raw {H_T W_T} grouped projection for callers
-that manage their own per-type features.
+``HGTConv`` is the typed-attention composition of the same primitives: one
+grouped matmul for every type's K/Q/V, one carry-mode fused attention
+launch per relation, and a ``merge_carries`` cross-type softmax per
+destination type — the Heterogeneous Graph Transformer with zero new
+kernels. ``GroupedLinear`` exposes the raw {H_T W_T} grouped projection
+for callers that manage their own per-type features; all grouped packing
+lives in ``nn.typed_linear.grouped_apply``.
 """
 
 from __future__ import annotations
@@ -33,14 +38,13 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.edge_index import EdgeIndex
 from repro.core.message_passing import MessagePassing
 from repro.core.trim import trim_to_layer_hetero
 from repro.kernels import use_pallas
-from repro.kernels.grouped_matmul import ops as gmm_ops
 from repro.nn.module import Module, glorot_uniform
+from repro.nn.typed_linear import grouped_apply
 
 EdgeType = Tuple[str, str, str]
 
@@ -113,20 +117,9 @@ class HeteroConv(Module):
             for et in ets]
         roots = [x_dict[et[2]] for et in ets]
         # 2. one grouped GEMM over 2·|E| groups: [agg_et...] + [x_dst_et...]
-        chunks = aggs + roots
-        sizes = [c.shape[0] for c in chunks]
-        w = jnp.stack([proj[et][0] for et in ets]
-                      + [proj[et][2] for et in ets])
-        # group sizes are static shape facts — keep them host-side so the
-        # packer can make shape decisions under tracing
-        out = gmm_ops.grouped_matmul(
-            jnp.concatenate(chunks, axis=0), w,
-            np.asarray(sizes, np.int32),
-            interpret=jax.default_backend() != "tpu")
-        parts, off = [], 0
-        for s in sizes:
-            parts.append(out[off:off + s])
-            off += s
+        parts = grouped_apply(
+            aggs + roots,
+            [proj[et][0] for et in ets] + [proj[et][2] for et in ets])
         # 3. per-relation output = projected neighbors + projected root
         grouped: Dict[str, List[jnp.ndarray]] = {}
         for i, et in enumerate(ets):
@@ -157,12 +150,17 @@ class HeteroConv(Module):
     def apply(self, params, x_dict: Dict[str, jnp.ndarray],
               edge_index_dict: Dict[EdgeType, jnp.ndarray],
               num_nodes_dict: Optional[Dict[str, int]] = None,
+              return_attention: bool = False,
               **kwargs) -> Dict[str, jnp.ndarray]:
         if num_nodes_dict is None:
             num_nodes_dict = {t: x.shape[0] for t, x in x_dict.items()}
         ets = [et for et in self.convs if et in edge_index_dict]
-        proj = self._grouped_projections(params, ets, edge_index_dict,
-                                         kwargs)
+        # return_attention needs each conv's per-edge alphas, so it forces
+        # the per-relation (ungrouped) path — grouped convs (SAGE family)
+        # have no attention coefficients to surface anyway.
+        proj = None if return_attention else self._grouped_projections(
+            params, ets, edge_index_dict, kwargs)
+        alpha_dict: Dict[EdgeType, jnp.ndarray] = {}
         if proj is not None:
             grouped = self._apply_grouped(params, proj, ets, x_dict,
                                           edge_index_dict)
@@ -174,7 +172,11 @@ class HeteroConv(Module):
                     params[_et_key(et)],
                     (x_dict[src_t], x_dict[dst_t]),
                     edge_index_dict[et],
-                    num_nodes=num_nodes_dict[dst_t], **kwargs)
+                    num_nodes=num_nodes_dict[dst_t],
+                    **(dict(kwargs, return_attention=True)
+                       if return_attention else kwargs))
+                if return_attention:
+                    out, alpha_dict[et] = out
                 grouped.setdefault(dst_t, []).append(out)
         out_dict = {dst_t: self._cross_type_reduce(outs)
                     for dst_t, outs in grouped.items()}
@@ -190,7 +192,151 @@ class HeteroConv(Module):
                         f"feature dim {x.shape[-1]} != layer output dims "
                         f"{dims}; add a reverse edge type for '{t}'")
                 out_dict[t] = x
+        if return_attention:
+            return out_dict, alpha_dict
         return out_dict
+
+
+class HGTConv(Module):
+    """Heterogeneous Graph Transformer layer (Hu et al. 2020) on the fused
+    typed-attention stack — ZERO new kernels.
+
+    Per node type: K/Q/V projections, batched with the output heads'
+    pattern into ONE grouped matmul over 3·|T| groups
+    (``nn.typed_linear.grouped_apply``). Per edge type r: relation
+    transforms ``k W^ATT_r`` / ``v W^MSG_r``, scaled-dot logits with the
+    learned per-head prior ``mu[r]`` (``DotLogit`` + ``prior``), and ONE
+    carry-mode attention launch (``MessagePassing.propagate(...,
+    return_carry=True)`` -> the generalised flash kernel over the
+    relation's blocked-ELL buckets). The per-relation ``SoftmaxCarry``s
+    targeting a destination type then combine via ``merge_carries`` — the
+    *cross-type* softmax over ALL incoming edges of a node, computed
+    without ever materialising cross-relation logits — and finalize into
+    gelu -> per-type output projection (one more grouped matmul) ->
+    ``sigmoid(skip[t])``-gated residual (when in/out dims match).
+
+    ``return_attention=True`` additionally returns the per-edge-type
+    ``(E_r, H)`` alpha dict, each relation's coefficients normalised
+    against the *merged* softmax statistics (they sum to 1 jointly across
+    relations into a node).
+    """
+
+    def __init__(self, in_features: int, out_features: int,
+                 metadata: Tuple[Sequence[str], Sequence[EdgeType]],
+                 heads: int = 2):
+        node_types, edge_types = metadata
+        if out_features % heads:
+            raise ValueError(
+                f"HGTConv: out_features={out_features} not divisible by "
+                f"heads={heads}")
+        self.node_types = list(node_types)
+        self.edge_types = [tuple(et) for et in edge_types]
+        self.in_features = in_features
+        self.out_features = out_features
+        self.heads = heads
+        self.head_dim = out_features // heads
+        self._mp = MessagePassing(aggr="sum")
+
+    def init(self, key):
+        T, R = len(self.node_types), len(self.edge_types)
+        H, D = self.heads, self.head_dim
+        ks = jax.random.split(key, 4)
+        return {
+            # K-groups (T), then Q-groups (T), then V-groups (T) — one
+            # grouped GEMM projects all three roles for every type.
+            "w_kqv": glorot_uniform(ks[0], (3 * T, self.in_features, H * D)),
+            "b_kqv": jnp.zeros((3 * T, H * D), jnp.float32),
+            "a_rel": glorot_uniform(ks[1], (R, H, D, D)),  # W^ATT per rel
+            "m_rel": glorot_uniform(ks[2], (R, H, D, D)),  # W^MSG per rel
+            "mu": jnp.ones((R, H), jnp.float32),           # typed prior
+            "w_out": glorot_uniform(ks[3], (T, H * D, self.out_features)),
+            "b_out": jnp.zeros((T, self.out_features), jnp.float32),
+            "skip": jnp.ones((T,), jnp.float32),
+        }
+
+    def apply(self, params, x_dict: Dict[str, jnp.ndarray],
+              edge_index_dict: Dict[EdgeType, jnp.ndarray],
+              num_nodes_dict: Optional[Dict[str, int]] = None,
+              return_attention: bool = False,
+              edge_mask_dict: Optional[Dict[EdgeType, jnp.ndarray]] = None,
+              **kwargs):
+        from repro.kernels.attention.ops import (DotLogit, finalize_carry,
+                                                 merge_carries)
+        if num_nodes_dict is None:
+            num_nodes_dict = {t: x.shape[0] for t, x in x_dict.items()}
+        H, D, T = self.heads, self.head_dim, len(self.node_types)
+        types = [t for t in self.node_types if t in x_dict]
+        ti = {t: i for i, t in enumerate(self.node_types)}
+        # 1. K/Q/V for every node type in ONE grouped matmul (3·|T| groups)
+        sel = ([ti[t] for t in types] + [T + ti[t] for t in types]
+               + [2 * T + ti[t] for t in types])
+        parts = grouped_apply([x_dict[t] for t in types] * 3,
+                              params["w_kqv"][jnp.asarray(sel)],
+                              [params["b_kqv"][i] for i in sel])
+        nt = len(types)
+        k = {t: parts[i].reshape(-1, H, D) for i, t in enumerate(types)}
+        q = {t: parts[nt + i].reshape(-1, H, D) for i, t in enumerate(types)}
+        v = {t: parts[2 * nt + i].reshape(-1, H, D)
+             for i, t in enumerate(types)}
+        scale = float(D) ** -0.5
+        # 2. one carry-mode attention launch per relation; carries of the
+        #    relations into each destination type merge into one softmax
+        carries: Dict[str, list] = {}
+        alpha_ctx = []
+        for r, et in enumerate(self.edge_types):
+            if et not in edge_index_dict:
+                continue
+            src_t, _, dst_t = et
+            k_rel = jnp.einsum("nhd,hde->nhe", k[src_t], params["a_rel"][r])
+            v_rel = jnp.einsum("nhd,hde->nhe", v[src_t], params["m_rel"][r])
+            carry = self._mp.propagate(
+                {}, edge_index_dict[et], (v_rel, None),
+                alpha=(k_rel, q[dst_t]), logit=DotLogit(scale=scale),
+                prior=params["mu"][r],
+                edge_mask=(None if edge_mask_dict is None
+                           else edge_mask_dict.get(et)),
+                num_nodes=num_nodes_dict[dst_t], return_carry=True)
+            carries.setdefault(dst_t, []).append(carry)
+            if return_attention:
+                alpha_ctx.append((et, k_rel, r))
+        merged = {t: merge_carries(cs) for t, cs in carries.items()}
+        # 3. finalize -> gelu -> per-type output heads (one grouped matmul)
+        dst_types = [t for t in types if t in merged]
+        hidden = [jax.nn.gelu(finalize_carry(merged[t]).reshape(-1, H * D))
+                  for t in dst_types]
+        outs = grouped_apply(
+            hidden, params["w_out"][jnp.asarray([ti[t] for t in dst_types])],
+            [params["b_out"][ti[t]] for t in dst_types])
+        out_dict: Dict[str, jnp.ndarray] = {}
+        for t, o in zip(dst_types, outs):
+            x = x_dict[t]
+            if self.in_features == self.out_features:
+                gate = jax.nn.sigmoid(params["skip"][ti[t]])
+                o = gate * o.astype(x.dtype) + (1.0 - gate) * x
+            out_dict[t] = o
+        # node types with no incoming edges keep their features (the
+        # HeteroConv passthrough convention, same dim guard)
+        for t in types:
+            if t not in out_dict:
+                if x_dict[t].shape[-1] != self.out_features:
+                    raise ValueError(
+                        f"node type '{t}' receives no messages and its "
+                        f"feature dim {x_dict[t].shape[-1]} != out_features "
+                        f"{self.out_features}; add a reverse edge type")
+                out_dict[t] = x_dict[t]
+        if not return_attention:
+            return out_dict
+        alpha_dict: Dict[EdgeType, jnp.ndarray] = {}
+        for et, k_rel, r in alpha_ctx:
+            dst_t = et[2]
+            ei = edge_index_dict[et]
+            if not isinstance(ei, EdgeIndex):
+                ei = EdgeIndex(jnp.stack([ei[0], ei[1]]), k_rel.shape[0],
+                               num_nodes_dict[dst_t])
+            alpha_dict[et] = ei.attend_alpha(
+                k_rel, q[dst_t], logit=DotLogit(scale=scale),
+                prior=params["mu"][r], m=merged[dst_t].m, l=merged[dst_t].l)
+        return out_dict, alpha_dict
 
 
 class HeteroGNN(Module):
@@ -203,18 +349,26 @@ class HeteroGNN(Module):
     inner hops.
     """
 
-    def __init__(self, make_conv: Callable[[int, int], MessagePassing],
+    def __init__(self, make_conv: Optional[Callable[[int, int],
+                                                    MessagePassing]],
                  metadata: Tuple[Sequence[str], Sequence[EdgeType]],
                  dims: Sequence[int], aggr: str = "sum",
-                 act=jax.nn.relu, grouped: Optional[bool] = None):
+                 act=jax.nn.relu, grouped: Optional[bool] = None,
+                 make_layer: Optional[Callable[[int, int], Module]] = None):
         node_types, edge_types = metadata
         self.node_types = list(node_types)
         self.edge_types = list(edge_types)
-        self.layers = [
-            HeteroConv({et: make_conv(dims[i], dims[i + 1])
-                        for et in self.edge_types}, aggr=aggr,
-                       grouped=grouped)
-            for i in range(len(dims) - 1)]
+        if make_layer is not None:
+            # whole-hetero-layer modules (HGTConv): the module itself owns
+            # the per-type/per-relation structure — no per-et replication
+            self.layers = [make_layer(dims[i], dims[i + 1])
+                           for i in range(len(dims) - 1)]
+        else:
+            self.layers = [
+                HeteroConv({et: make_conv(dims[i], dims[i + 1])
+                            for et in self.edge_types}, aggr=aggr,
+                           grouped=grouped)
+                for i in range(len(dims) - 1)]
         self.act = act
 
     def init(self, key):
@@ -225,13 +379,15 @@ class HeteroGNN(Module):
     def apply(self, params, x_dict, edge_index_dict,
               num_nodes_dict=None,
               num_sampled_nodes_dict=None, num_sampled_edges_dict=None,
-              trim: bool = False, **kwargs):
+              trim: bool = False, return_attention: bool = False,
+              **kwargs):
         do_trim = trim and num_sampled_nodes_dict is not None
         if do_trim and num_sampled_edges_dict is None:
             raise ValueError(
                 "HeteroGNN.apply(trim=True) needs num_sampled_edges_dict "
                 "alongside num_sampled_nodes_dict (the sampler's per-hop "
                 "edge budgets drive the per-relation slicing)")
+        alphas = []
         for i, layer in enumerate(self.layers):
             # layer 0 sees the untrimmed graph by construction — skipping
             # its no-op trim keeps the loader-prefilled CSR/CSC/ELL caches
@@ -241,10 +397,19 @@ class HeteroGNN(Module):
                     i, num_sampled_nodes_dict, num_sampled_edges_dict,
                     x_dict, edge_index_dict)
                 num_nodes_dict = {t: x.shape[0] for t, x in x_dict.items()}
-            x_dict = layer.apply(params[f"layer{i}"], x_dict,
-                                 edge_index_dict, num_nodes_dict, **kwargs)
+            res = layer.apply(params[f"layer{i}"], x_dict,
+                              edge_index_dict, num_nodes_dict,
+                              **(dict(kwargs, return_attention=True)
+                                 if return_attention else kwargs))
+            if return_attention:
+                x_dict, layer_alpha = res
+                alphas.append(layer_alpha)
+            else:
+                x_dict = res
             if i < len(self.layers) - 1:
                 x_dict = {t: self.act(x) for t, x in x_dict.items()}
+        if return_attention:
+            return x_dict, alphas
         return x_dict
 
 
@@ -253,6 +418,22 @@ def to_hetero(make_conv: Callable[[int, int], MessagePassing],
               grouped: Optional[bool] = None) -> HeteroGNN:
     """Replicate a homogeneous conv constructor across all edge types."""
     return HeteroGNN(make_conv, metadata, dims, aggr=aggr, grouped=grouped)
+
+
+def hgt(metadata, dims: Sequence[int], heads: int = 2) -> HeteroGNN:
+    """Multi-layer HGT graph-transformer block.
+
+    One :class:`HGTConv` per layer via ``make_layer`` — every layer shares
+    the SAME packed per-relation ELL layouts through the hetero trimming
+    path (``trim_to_layer_hetero`` slices rungs, it never re-packs), so a
+    loader-prefilled batch keeps all layers' attention launches on the
+    fused kernel. No inter-layer activation: HGTConv already applies
+    gelu + the gated residual internally (the transformer convention).
+    """
+    return HeteroGNN(None, metadata, dims,
+                     make_layer=lambda i, o: HGTConv(i, o, metadata,
+                                                     heads=heads),
+                     act=lambda x: x)
 
 
 class GroupedLinear(Module):
@@ -276,14 +457,6 @@ class GroupedLinear(Module):
     def apply(self, params, x_dict: Dict[str, jnp.ndarray],
               force_pallas: Optional[bool] = None,
               interpret: bool = False) -> Dict[str, jnp.ndarray]:
-        sizes = [x_dict[t].shape[0] for t in self.types]
-        packed = jnp.concatenate([x_dict[t] for t in self.types], axis=0)
-        out = gmm_ops.grouped_matmul(
-            packed, params["w"], jnp.asarray(sizes, jnp.int32),
-            force_pallas=force_pallas, interpret=interpret)
-        outs = {}
-        off = 0
-        for t, s in zip(self.types, sizes):
-            outs[t] = out[off:off + s]
-            off += s
-        return outs
+        parts = grouped_apply([x_dict[t] for t in self.types], params["w"],
+                              force_pallas=force_pallas, interpret=interpret)
+        return dict(zip(self.types, parts))

@@ -71,6 +71,8 @@ class MessagePassing(Module):
                   edge_mask: Optional[jnp.ndarray] = None,
                   alpha: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
                   negative_slope: float = 0.2,
+                  logit=None, prior: Optional[jnp.ndarray] = None,
+                  return_carry: bool = False,
                   return_attention: bool = False) -> jnp.ndarray:
         """Run one message-passing step, choosing the optimal compute path.
 
@@ -84,7 +86,10 @@ class MessagePassing(Module):
         of dense per-node logit halves ``(alpha_src, alpha_dst)`` keyed to
         the graph's (src, dst) node sides; messages become softmax-weighted
         source features. The fused predicate extends to this mode — see
-        :meth:`_propagate_attention`.
+        :meth:`_propagate_attention`. ``logit``/``prior`` select the typed
+        logit transform (``AdditiveLogit``/``DotLogit``), and
+        ``return_carry=True`` returns the unfinalised ``SoftmaxCarry`` for
+        cross-relation merging (HGT) instead of the aggregated output.
         """
         if edge_mask is not None:
             edge_weight = (edge_mask if edge_weight is None
@@ -93,7 +98,8 @@ class MessagePassing(Module):
             return self._propagate_attention(
                 params, edge_index, x, alpha, edge_weight=edge_weight,
                 num_nodes=num_nodes, message_callback=message_callback,
-                negative_slope=negative_slope,
+                negative_slope=negative_slope, logit=logit, prior=prior,
+                return_carry=return_carry,
                 return_attention=return_attention)
         if isinstance(x, tuple):
             x_src, x_dst = x
@@ -162,6 +168,8 @@ class MessagePassing(Module):
                              num_nodes: Optional[int],
                              message_callback: Optional[Callable],
                              negative_slope: float,
+                             logit=None, prior=None,
+                             return_carry: bool = False,
                              return_attention: bool):
         """Attention-weighted aggregation (the GAT step), fused when it can.
 
@@ -183,7 +191,9 @@ class MessagePassing(Module):
         The aggregation is the attention-weighted sum *by definition* —
         ``self.aggr`` is not consulted in this mode. An overridden
         ``update`` hook still runs (on the per-head aggregate, with the
-        receiver-side projected features as its ``x`` argument).
+        receiver-side projected features as its ``x`` argument) — except in
+        ``return_carry`` mode, where the unfinalised ``SoftmaxCarry`` is
+        returned as-is for the caller to merge/finalize (HGT).
         """
         z_src, z_dst = z if isinstance(z, tuple) else (z, z)
         a_src, a_dst = alpha
@@ -193,7 +203,32 @@ class MessagePassing(Module):
         else:
             z_send, z_recv, a_send, a_recv = z_src, z_dst, a_src, a_dst
 
-        if message_callback is None and isinstance(edge_index, EdgeIndex):
+        typed = logit is not None or return_carry
+        if typed and message_callback is not None:
+            raise NotImplementedError(
+                "message_callback (edge-level materialisation) is not "
+                "supported with typed logits / carry-mode attention")
+        if typed and not isinstance(edge_index, EdgeIndex):
+            # Raw edge arrays: wrap them so the COO carry oracle inside
+            # EdgeIndex.attend serves this branch too (no cache -> oracle).
+            send, recv = edge_index[0], edge_index[1]
+            n_out = (num_nodes if num_nodes is not None
+                     else z_recv.shape[0])
+            if transpose:
+                send, recv = recv, send
+            n_send = z_send.shape[0]
+            edge_index = EdgeIndex(jnp.stack([send, recv]), n_send, n_out)
+            transpose = False
+
+        if typed:
+            res = edge_index.attend(
+                z_send, a_send, a_recv, negative_slope=negative_slope,
+                logit=logit, prior=prior, edge_weight=edge_weight,
+                transpose=transpose, return_carry=return_carry,
+                return_attention=return_attention)
+            if return_carry:
+                return res
+        elif message_callback is None and isinstance(edge_index, EdgeIndex):
             res = edge_index.attend(
                 z_send, a_send, a_recv, negative_slope=negative_slope,
                 edge_weight=edge_weight, transpose=transpose,

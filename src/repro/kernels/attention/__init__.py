@@ -1,7 +1,41 @@
-"""Fused GAT attention aggregation over the bucketed blocked-ELL layout.
+"""Fused typed attention over the bucketed blocked-ELL layout.
 
-``gat_attention.py`` holds the Pallas flash-GAT kernel (online masked
-softmax + pipelined DMA gathers), ``ops.py`` the differentiable dispatching
-wrappers (``gat_attend_ell`` / ``gat_alpha_ell``), ``ref.py`` the panel
-oracle.
+``gat_attention.py`` holds the Pallas flash kernel (online masked softmax +
+pipelined DMA gathers) — one kernel body, two logit transforms and two
+output modes:
+
+* **logit transform** — ``"add"`` is GAT's additive leaky-relu over scalar
+  per-head halves; ``"dot"`` is the scaled dot product over head-dim-wide
+  halves times a per-head typed prior (HGT's ``mu[rel]``). The additive
+  launches still stamp the historical ``_gat_ell_kernel`` name into the
+  jaxpr (a thin delegator), so existing dispatch audits are unaffected;
+  typed carry launches audit as ``_attn_ell_kernel``.
+* **output mode** — normalised output (GAT), or the raw softmax carry.
+
+``ops.py`` is the differentiable public surface (``gat_attend_ell`` /
+``gat_alpha_ell`` / ``attn_carry_ell`` / ``merge_carries`` /
+``finalize_carry`` / ``attn_alpha_ell``), ``ref.py`` the panel/COO oracles.
+
+Carry-merge cross-type softmax convention
+-----------------------------------------
+A carry is the online-softmax state ``SoftmaxCarry(m, l, acc)`` per
+destination row and head: ``m`` the running masked logit max (``-inf`` on
+rows the relation never touches), ``l`` the *unweighted* exp-sum
+``sum_j exp(logit_j - m)``, ``acc`` the *weighted* unnormalised accumulator
+``sum_j exp(logit_j - m) * w_j * z_j`` (edge weights hit the numerator
+only — no renormalisation, matching the materialised path). Merging R
+relations targeting the same rows::
+
+    M      = max_r m_r                      # stop_gradient'd stabilizer
+    M_safe = where(isfinite(M), M, 0)       # all-empty rows stay defined
+    l      = sum_r l_r  * exp(m_r - M_safe)
+    acc    = sum_r acc_r * exp(m_r - M_safe)
+    out    = acc / max(l, 1e-16)            # finalize_carry
+
+``exp(-inf - M_safe) = 0`` makes empty relation rows vanish from the sums,
+so the merged result equals one softmax over the UNION of all relations'
+incoming edges — the HGT cross-type softmax — without ever materialising
+cross-relation logits. All stabilizers (``m`` inside kernels/refs, ``M`` at
+merge time) are ``jax.lax.stop_gradient`` constants: the finalized output
+is shift-invariant in them, so gradients are exact.
 """

@@ -1,28 +1,50 @@
-"""Fused GAT attention aggregation — blocked-ELL Pallas TPU kernel.
+"""Fused typed-attention aggregation — blocked-ELL Pallas TPU kernel.
 
-One kernel fuses the whole attention aggregation of a GAT layer over the
-same bucketed blocked-ELL layout the SpMM kernel consumes:
+ONE kernel body (``_attn_ell_kernel``) fuses the whole attention
+aggregation of a graph-attention layer over the same bucketed blocked-ELL
+layout the SpMM kernel consumes:
 
-    gather alpha_src[nbr] -> leaky-relu logits -> masked row softmax
+    gather sender term[nbr] -> per-relation logit -> masked row softmax
       -> weighted accumulate of z[nbr]
 
-in a single VMEM pass per row block (flash-GAT style): the softmax runs
+in a single VMEM pass per row block (flash style): the softmax runs
 *online* — a running max / running sum rescale the feature accumulator as
 neighbor columns stream in — so the ``(E, H, F)`` edge-message tensor of the
 materialised path is never built. Per neighbor column the kernel issues two
 batches of async HBM->VMEM copies (the ``(1, F)`` feature row and the
-``(1, H)`` ``alpha_src`` row of each neighbor), double-buffered exactly like
-the SpMM kernel's pipelined gather, with the scalar-prefetched neighbor
+``(1, H*LD)`` sender-term row of each neighbor), double-buffered exactly
+like the SpMM kernel's pipelined gather, with the scalar-prefetched neighbor
 table as the DMA address stream.
+
+The logit transform is a static template parameter (``logit_kind``):
+
+  * ``"add"`` — GAT's additive leaky-relu logit, ``LD = 1``
+    (``leaky(alpha_src[nbr] + alpha_dst[row])``);
+  * ``"dot"`` — HGT's scaled dot product, ``LD = head_dim``
+    (``sum_d k[nbr, h, d] * q[row, h, d] * prior[h]`` — the relation prior
+    ``mu[rel]/sqrt(D)`` enters as a ``(1, H)`` VMEM row).
+
+``return_carry=True`` additionally emits the running softmax carry
+``(m, l)`` next to the *unnormalised* accumulator, so several per-relation
+launches targeting the same destination rows can be merged ops-side into
+one cross-relation softmax (see ``kernels/attention/__init__.py`` for the
+merge convention).
 
 Layout: ``z`` arrives flattened to ``(N, H*F)`` so the head axis rides the
 feature grid dimension (the per-head feature slice starts at ``h * F``) and
-the DMA indexing stays 2-D. ``alpha_dst`` is pre-gathered per bucket row
-host/XLA-side (it is keyed by *row ids*, not by the neighbor table) and
-enters as a dense ``(R, H)`` VMEM panel.
+the DMA indexing stays 2-D. The receiver term is pre-gathered per bucket
+row host/XLA-side (it is keyed by *row ids*, not by the neighbor table) and
+enters as a dense ``(R, H*LD)`` VMEM panel.
 
 Grid: ``(num_row_blocks, heads, num_feat_blocks)``; each (row, head, feat)
-tile recomputes the cheap ``(BR, K)`` online softmax and is written once.
+tile recomputes the cheap ``(BR, K)`` online softmax and is written once
+(the tiny ``(BR, 1)`` carry blocks are revisited across feat tiles with
+identical values).
+
+``_gat_ell_kernel`` is a named delegator to the same body: Pallas reports
+the kernel *function name* in the jaxpr, and the dispatch auditor / cost
+table key on it — additive launches keep auditing as ``_gat_ell_kernel``,
+typed carry launches as ``_attn_ell_kernel``.
 """
 
 from __future__ import annotations
@@ -39,20 +61,30 @@ from repro.kernels.budgets import DEFAULT_BF, DEFAULT_BR
 _NUM_SLOTS = 2  # double buffering
 
 
-def _gat_ell_kernel(idx_sref, idx_ref, adst_ref, w_ref, asrc_hbm, z_hbm,
-                    out_ref, zgather, agather, sems, *, block_rows: int,
-                    block_feat: int, k: int, heads: int, feat: int,
-                    negative_slope: float, has_weight: bool):
+def _attn_ell_kernel(idx_sref, idx_ref, adst_ref, w_ref, *rest,
+                     block_rows: int, block_feat: int, k: int, heads: int,
+                     feat: int, negative_slope: float, has_weight: bool,
+                     logit_kind: str = "add", logit_dim: int = 1,
+                     return_carry: bool = False):
     """One (row_block, head, feat_block) tile: online-softmax accumulate.
 
     ``idx_sref``   full (R, K) neighbor table, scalar-prefetched (SMEM) — the
                    DMA address stream.
     ``idx_ref``    (BR, K) VMEM panel of the same table — vectorized masking.
-    ``adst_ref``   (BR, H) VMEM panel: alpha_dst gathered per bucket row.
+    ``adst_ref``   (BR, H*LD) VMEM panel: receiver term per bucket row
+                   (alpha_dst for additive logits, q for dot logits).
+    ``rest``       [prior_ref] asrc_hbm z_hbm out_ref [m_ref l_ref]
+                   zgather agather sems — the prior operand and the carry
+                   outputs exist only on ``return_carry`` launches.
     ``zgather``    (2, BR, BF) VMEM scratch — feature-row landing zone.
-    ``agather``    (2, BR, H) VMEM scratch — alpha_src-row landing zone.
+    ``agather``    (2, BR, H*LD) VMEM scratch — sender-row landing zone.
     ``sems``       (2, 2, BR) DMA semaphores: [0] features, [1] alphas.
     """
+    if return_carry:
+        (prior_ref, asrc_hbm, z_hbm, out_ref, m_ref, l_ref, zgather,
+         agather, sems) = rest
+    else:
+        asrc_hbm, z_hbm, out_ref, zgather, agather, sems = rest
     r_blk = pl.program_id(0)
     h = pl.program_id(1)
     f_blk = pl.program_id(2)
@@ -91,8 +123,14 @@ def _gat_ell_kernel(idx_sref, idx_ref, adst_ref, w_ref, asrc_hbm, z_hbm,
         jax.lax.fori_loop(0, block_rows, body_r, 0)
 
     idx_panel = idx_ref[...]  # (BR, K)
-    adst_col = jax.lax.dynamic_slice_in_dim(
-        adst_ref[...].astype(jnp.float32), h, 1, 1)  # (BR, 1): this head
+    if logit_kind == "add":
+        adst_col = jax.lax.dynamic_slice_in_dim(
+            adst_ref[...].astype(jnp.float32), h, 1, 1)  # (BR, 1): this head
+    else:  # dot: this head's (BR, LD) query slice + scalar prior
+        q_col = jax.lax.dynamic_slice_in_dim(
+            adst_ref[...].astype(jnp.float32), h * logit_dim, logit_dim, 1)
+        prior_col = jax.lax.dynamic_slice_in_dim(
+            prior_ref[...].astype(jnp.float32), h, 1, 1)  # (1, 1)
     if has_weight:
         w_panel = w_ref[...].astype(jnp.float32)
 
@@ -114,13 +152,18 @@ def _gat_ell_kernel(idx_sref, idx_ref, adst_ref, w_ref, asrc_hbm, z_hbm,
 
         wait_column(slot, kk)
         ztile = zgather[slot].astype(jnp.float32)   # (BR, BF)
-        arows = agather[slot].astype(jnp.float32)   # (BR, H)
-        a_col = jax.lax.dynamic_slice_in_dim(arows, h, 1, 1)  # (BR, 1)
+        arows = agather[slot].astype(jnp.float32)   # (BR, H*LD)
 
         col_idx = jax.lax.dynamic_slice_in_dim(idx_panel, kk, 1, 1)  # (BR, 1)
         valid = col_idx >= 0
-        logit = a_col + adst_col
-        logit = jnp.where(logit >= 0, logit, negative_slope * logit)
+        if logit_kind == "add":
+            a_col = jax.lax.dynamic_slice_in_dim(arows, h, 1, 1)  # (BR, 1)
+            logit = a_col + adst_col
+            logit = jnp.where(logit >= 0, logit, negative_slope * logit)
+        else:  # dot: <k[nbr], q[row]> over this head's LD lanes, scaled
+            a_sl = jax.lax.dynamic_slice_in_dim(
+                arows, h * logit_dim, logit_dim, 1)  # (BR, LD)
+            logit = jnp.sum(a_sl * q_col, axis=1, keepdims=True) * prior_col
         logit = jnp.where(valid, logit, -jnp.inf)
 
         # Online softmax: rescale the accumulator by exp(m - m_new). While a
@@ -133,9 +176,26 @@ def _gat_ell_kernel(idx_sref, idx_ref, adst_ref, w_ref, asrc_hbm, z_hbm,
             w_panel, kk, 1, 1)
         return m_new, l * corr + p, acc * corr + num * ztile
 
-    _, l, acc = jax.lax.fori_loop(0, k, body_k, (m0, l0, acc0))
-    # acc/l = sum_k softmax_k(logits) * w_k * z_k; empty rows stay 0.
-    out_ref[...] = (acc / jnp.maximum(l, 1e-16)).astype(out_ref.dtype)
+    m, l, acc = jax.lax.fori_loop(0, k, body_k, (m0, l0, acc0))
+    if return_carry:
+        # Unnormalised carry out: the ops layer merges (m, l, acc) triples
+        # across relation launches before the single finalize divide. The
+        # (BR, 1) carry blocks are revisited per feat tile — same values.
+        out_ref[...] = acc.astype(out_ref.dtype)
+        m_ref[...] = m.astype(m_ref.dtype)
+        l_ref[...] = l.astype(l_ref.dtype)
+    else:
+        # acc/l = sum_k softmax_k(logits) * w_k * z_k; empty rows stay 0.
+        out_ref[...] = (acc / jnp.maximum(l, 1e-16)).astype(out_ref.dtype)
+
+
+def _gat_ell_kernel(*args, **kwargs):
+    """Additive-logit launch face of :func:`_attn_ell_kernel`.
+
+    Exists for its ``__name__``: Pallas stamps the kernel function name into
+    the jaxpr, and the dispatch auditor / FLOP cost table key on it.
+    """
+    return _attn_ell_kernel(*args, **kwargs)
 
 
 @functools.partial(
@@ -247,3 +307,129 @@ def gat_ell_pallas(ell_idx: jnp.ndarray, adst: jnp.ndarray,
     return _gat_ell_pallas_cv(float(negative_slope), block_rows, block_feat,
                               interpret, ell_idx, adst, ell_w, alpha_src,
                               z2d)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("logit_kind", "negative_slope", "block_rows",
+                     "block_feat", "interpret"),
+)
+def _attn_ell_pallas_impl(ell_idx: jnp.ndarray, adst: jnp.ndarray,
+                          ell_w: Optional[jnp.ndarray], prior: jnp.ndarray,
+                          alpha_src: jnp.ndarray, z2d: jnp.ndarray, *,
+                          logit_kind: str, negative_slope: float = 0.2,
+                          block_rows: int = DEFAULT_BR,
+                          block_feat: Optional[int] = None,
+                          interpret: bool = False):
+    """Typed-attention carry launch over one blocked-ELL bucket.
+
+    Args:
+      ell_idx:   (R, K) int32 neighbor table, -1 = padding. R % BR == 0.
+      adst:      (R, H*LD) receiver term per bucket row (alpha_dst / q).
+      ell_w:     optional (R, K) per-slot post-softmax weights.
+      prior:     (1, H) per-head logit scale (mu[rel]/sqrt(D); used by the
+                 dot logit, carried-but-ignored by the additive one).
+      alpha_src: (N, H*LD) dense per-node sender term (gathered in-kernel).
+      z2d:       (N, H*F) head-flattened features (gathered in-kernel).
+
+    Returns ``(acc, m, l)`` float32: the *unnormalised* accumulator
+    ``(R, H*F)`` plus the per-(row, head) running softmax max/denominator —
+    mergeable across relation launches, finalized ops-side.
+    """
+    rows, k = ell_idx.shape
+    heads = prior.shape[1]
+    hl = adst.shape[1]
+    hf = z2d.shape[1]
+    assert hl % heads == 0, (hl, heads)
+    assert hf % heads == 0, (hf, heads)
+    logit_dim = hl // heads
+    feat = hf // heads
+    if block_feat is None:
+        block_feat = DEFAULT_BF if feat % DEFAULT_BF == 0 else feat
+    assert rows % block_rows == 0, (rows, block_rows)
+    assert feat % block_feat == 0, (feat, block_feat)
+    assert k >= 1, "ELL table must have at least one neighbor column"
+    nfb = feat // block_feat
+    grid = (rows // block_rows, heads, nfb)
+
+    has_weight = ell_w is not None
+    if ell_w is None:  # dummy operand keeps the signature static
+        ell_w = jnp.zeros((block_rows, k), jnp.float32)
+
+    kernel = functools.partial(
+        _attn_ell_kernel, block_rows=block_rows, block_feat=block_feat, k=k,
+        heads=heads, feat=feat, negative_slope=float(negative_slope),
+        has_weight=has_weight, logit_kind=logit_kind, logit_dim=logit_dim,
+        return_carry=True)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, k), lambda i, h, j, idx: (i, 0)),
+            pl.BlockSpec((block_rows, hl), lambda i, h, j, idx: (i, 0)),
+            pl.BlockSpec((block_rows, k), lambda i, h, j, idx: (i, 0))
+            if has_weight else
+            pl.BlockSpec((block_rows, k), lambda i, h, j, idx: (0, 0)),
+            pl.BlockSpec((1, heads), lambda i, h, j, idx: (0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, block_feat),
+                         lambda i, h, j, idx: (i, h * nfb + j)),
+            pl.BlockSpec((block_rows, 1), lambda i, h, j, idx: (i, h)),
+            pl.BlockSpec((block_rows, 1), lambda i, h, j, idx: (i, h)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((_NUM_SLOTS, block_rows, block_feat), z2d.dtype),
+            pltpu.VMEM((_NUM_SLOTS, block_rows, hl), alpha_src.dtype),
+            pltpu.SemaphoreType.DMA((2, _NUM_SLOTS, block_rows)),
+        ],
+    )
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, hf), jnp.float32),
+            jax.ShapeDtypeStruct((rows, heads), jnp.float32),
+            jax.ShapeDtypeStruct((rows, heads), jnp.float32),
+        ],
+        interpret=interpret,
+    )(ell_idx, ell_idx, adst, ell_w, prior, alpha_src, z2d)
+
+
+_attn_ell_pallas_cv = forward_only_pallas(
+    lambda logit_kind, negative_slope, block_rows, block_feat, interpret,
+    ell_idx, adst, ell_w, prior, alpha_src, z2d:
+        _attn_ell_pallas_impl(ell_idx, adst, ell_w, prior, alpha_src, z2d,
+                              logit_kind=logit_kind,
+                              negative_slope=negative_slope,
+                              block_rows=block_rows, block_feat=block_feat,
+                              interpret=interpret),
+    num_static=5,
+    message=(
+        "attn_ell_pallas is the raw Pallas kernel and has no backward rule. "
+        "Differentiate through the ops-level entry points instead "
+        "(repro.kernels.attention.ops.attn_carry_ell carries a custom VJP "
+        "over the merged-carry form), or set REPRO_USE_PALLAS=0 to dispatch "
+        "the differentiable XLA oracle."))
+
+
+def attn_ell_pallas(ell_idx: jnp.ndarray, adst: jnp.ndarray,
+                    ell_w: Optional[jnp.ndarray], prior: jnp.ndarray,
+                    alpha_src: jnp.ndarray, z2d: jnp.ndarray, *,
+                    logit_kind: str = "dot", negative_slope: float = 0.2,
+                    block_rows: int = DEFAULT_BR,
+                    block_feat: Optional[int] = None,
+                    interpret: bool = False):
+    """Typed-attention carry kernel (see :func:`_attn_ell_pallas_impl`).
+
+    Forward-only: differentiating this raw entry point raises a clear
+    ``NotImplementedError`` pointing at the ops-level wrapper (which carries
+    the custom VJP) and the ``REPRO_USE_PALLAS`` fallback env var.
+    """
+    return _attn_ell_pallas_cv(str(logit_kind), float(negative_slope),
+                               block_rows, block_feat, interpret, ell_idx,
+                               adst, ell_w, prior, alpha_src, z2d)

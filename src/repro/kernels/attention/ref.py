@@ -1,9 +1,16 @@
-"""Pure-jnp oracle for the fused GAT attention aggregation (panel layout).
+"""Pure-jnp oracle for the fused typed-attention aggregation.
 
-Same math as the Pallas kernel — leaky-relu logits, masked row softmax,
-weighted accumulate — over the ``(R, K)`` blocked-ELL panels, written as
-plain XLA ops. Used for validation, as the CPU/GPU dispatch target, and as
-the recompute inside the ops-level custom VJP.
+Same math as the Pallas kernel — per-relation logits (additive leaky-relu
+or scaled dot product + typed prior), masked row softmax, weighted
+accumulate — over the ``(R, K)`` blocked-ELL panels and the COO edge list,
+written as plain XLA ops. Used for validation, as the CPU/GPU dispatch
+target, and as the recompute inside the ops-level custom VJPs.
+
+Convention for the carry references: the softmax stabilizers (the running
+max ``m``, and the merged max at carry-merge time) are ``stop_gradient``
+constants. The normalised output is shift-invariant in them, so this is the
+exact gradient — minus the float cancellation noise of differentiating
+through a max.
 """
 
 from __future__ import annotations
@@ -91,3 +98,124 @@ def gat_attend_panels(ell_idx: jnp.ndarray, adst: jnp.ndarray,
         zg = z[jnp.maximum(ell_idx, 0)]                 # (R, K, H, F)
         return jnp.einsum("rkh,rkhf->rhf", p.astype(jnp.float32),
                           zg.astype(jnp.float32)).astype(z.dtype)
+
+
+# ----------------------------------------------------------- typed logits
+def attn_logit_panels(ell_idx: jnp.ndarray, adst: jnp.ndarray,
+                      alpha_src: jnp.ndarray, *, logit_kind: str = "add",
+                      negative_slope: float = 0.2,
+                      prior: Optional[jnp.ndarray] = None
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Raw per-slot logits ``(R, K, H)`` + validity mask ``(R, K)``.
+
+    ``adst`` (R, H, LD) receiver term per row, ``alpha_src`` (N, H, LD)
+    sender term per node — ``LD == 1`` for the additive GAT logit, the head
+    dim for the dot logit. ``prior`` (H,) is the per-head scale of the dot
+    logit (``mu[rel] / sqrt(D)``).
+    """
+    mask = ell_idx >= 0
+    safe = jnp.maximum(ell_idx, 0)
+    ag = alpha_src[safe].astype(jnp.float32)            # (R, K, H, LD)
+    ad = adst[:, None].astype(jnp.float32)              # (R, 1, H, LD)
+    if logit_kind == "add":
+        raw = (ag + ad).sum(axis=-1)                    # LD == 1
+        logits = jnp.where(raw >= 0, raw, negative_slope * raw)
+    else:
+        logits = (ag * ad).sum(axis=-1)
+        if prior is not None:
+            logits = logits * prior.astype(jnp.float32)[None, None, :]
+    return logits, mask
+
+
+def attn_carry_panels(ell_idx: jnp.ndarray, adst: jnp.ndarray,
+                      ell_w: Optional[jnp.ndarray], alpha_src: jnp.ndarray,
+                      z: jnp.ndarray, *, logit_kind: str = "add",
+                      negative_slope: float = 0.2,
+                      prior: Optional[jnp.ndarray] = None
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Oracle softmax carry over one bucket: ``(m, l, acc)``.
+
+    Mirrors the carry-mode kernel exactly: ``m`` (R, H) is the masked logit
+    max (-inf on empty rows, stop-gradded), ``l`` (R, H) the unweighted
+    exp-sum, ``acc`` (R, H, F) the *weighted*, unnormalised accumulator
+    (``ell_w`` multiplies the numerator only). ``z`` is (N, H, F).
+
+    Scoped ``repro_oracle`` for the dispatch auditor: this is the panel
+    fallback of ``attn_carry_ell``. (The kernel's custom VJP re-enters it
+    inside a ``repro_kernel_vjp`` scope, which takes precedence.)
+    """
+    with jax.named_scope("repro_oracle:attn_carry_panels"):
+        logits, mask = attn_logit_panels(
+            ell_idx, adst, alpha_src, logit_kind=logit_kind,
+            negative_slope=negative_slope, prior=prior)
+        neg = jnp.where(mask[..., None], logits, -jnp.inf)
+        m = jax.lax.stop_gradient(jnp.max(neg, axis=1))     # (R, H)
+        m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+        p = jnp.where(mask[..., None],
+                      jnp.exp(logits - m_safe[:, None, :]), 0.0)
+        l = p.sum(axis=1)                                   # (R, H)
+        num = p if ell_w is None else p * ell_w[..., None]
+        zg = z[jnp.maximum(ell_idx, 0)].astype(jnp.float32)
+        acc = jnp.einsum("rkh,rkhf->rhf", num, zg)          # (R, H, F)
+    return m, l, acc
+
+
+def attn_carry_coo(send: jnp.ndarray, recv: jnp.ndarray,
+                   a_send: jnp.ndarray, a_recv: jnp.ndarray,
+                   z_send: jnp.ndarray, *, num_rows: int,
+                   logit_kind: str = "add", negative_slope: float = 0.2,
+                   prior: Optional[jnp.ndarray] = None,
+                   edge_weight: Optional[jnp.ndarray] = None
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """COO-level softmax carry oracle: ``(m, l, acc)`` per destination row.
+
+    The edge-materialising fallback of the typed-attention carry path;
+    same stabilizer/weight conventions as :func:`attn_carry_panels`.
+    ``a_send``/``a_recv`` are (N, H, LD), ``z_send`` (N, H, F).
+    """
+    with jax.named_scope("repro_oracle:attn_carry_coo"):
+        a = a_send[send].astype(jnp.float32)
+        b = a_recv[recv].astype(jnp.float32)
+        if logit_kind == "add":
+            raw = (a + b).sum(axis=-1)                       # (E, H)
+            logits = jnp.where(raw >= 0, raw, negative_slope * raw)
+        else:
+            logits = (a * b).sum(axis=-1)
+            if prior is not None:
+                logits = logits * prior.astype(jnp.float32)[None, :]
+        m = jax.lax.stop_gradient(
+            jax.ops.segment_max(logits, recv, num_segments=num_rows))
+        m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+        p = jnp.exp(logits - m_safe[recv])                   # (E, H)
+        l = jax.ops.segment_sum(p, recv, num_segments=num_rows)
+        msg = z_send[send].astype(jnp.float32) * p[..., None]
+        if edge_weight is not None:
+            msg = msg * edge_weight[:, None, None].astype(jnp.float32)
+        acc = jax.ops.segment_sum(msg, recv, num_segments=num_rows)
+    return m, l, acc
+
+
+def attn_alpha_coo(send: jnp.ndarray, recv: jnp.ndarray,
+                   a_send: jnp.ndarray, a_recv: jnp.ndarray, *,
+                   m: jnp.ndarray, l: jnp.ndarray, logit_kind: str = "add",
+                   negative_slope: float = 0.2,
+                   prior: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Per-edge attention ``(E, H)`` against *merged* softmax stats.
+
+    ``m``/``l`` are the (num_rows, H) carry statistics after cross-relation
+    merging, so the returned alphas of all relations into a destination
+    node sum to 1 jointly (the cross-type softmax the explainers see).
+    """
+    with jax.named_scope("repro_oracle:attn_alpha_coo"):
+        a = a_send[send].astype(jnp.float32)
+        b = a_recv[recv].astype(jnp.float32)
+        if logit_kind == "add":
+            raw = (a + b).sum(axis=-1)
+            logits = jnp.where(raw >= 0, raw, negative_slope * raw)
+        else:
+            logits = (a * b).sum(axis=-1)
+            if prior is not None:
+                logits = logits * prior.astype(jnp.float32)[None, :]
+        m_safe = jnp.where(jnp.isfinite(m), m, 0.0)
+        return (jnp.exp(logits - m_safe[recv])
+                / jnp.maximum(l[recv], 1e-16))

@@ -82,23 +82,50 @@ def ell_launch_usage(rows: int, k: int, feat: int, *,
             "launch_rows": launch_rows, "block_feat": bf}
 
 
+def attn_launch_usage(rows: int, k: int, heads: int, feat: int, *,
+                      logit_dim: int = 1,
+                      block_rows: int = DEFAULT_BR,
+                      block_feat: int = DEFAULT_BF,
+                      dtype_bytes: int = 4,
+                      weighted: bool = False,
+                      carry: bool = False) -> Dict[str, int]:
+    """Static SMEM/VMEM bytes of one (chunked) typed-attention launch.
+
+    ``logit_dim`` is the per-head width of the attention operands: 1 for
+    additive GAT logits, the head dim D for HGT's dot-product K/Q.  A typed
+    launch additionally stages a ``(1, heads)`` prior row in VMEM, and a
+    carry launch (``return_carry=True``) keeps the running ``(m, l)``
+    softmax statistics as extra per-head output blocks.
+    """
+    launch_rows = min(rows, ell_chunk_rows(k, block_rows))
+    bf = block_feat if feat % block_feat == 0 else feat
+    al = heads * logit_dim
+    smem = launch_rows * k * _I32
+    vmem = (DOUBLE_BUFFER_SLOTS * block_rows * bf * dtype_bytes   # z gather
+            + DOUBLE_BUFFER_SLOTS * block_rows * al * dtype_bytes  # alpha
+            + block_rows * bf * dtype_bytes                       # out block
+            + block_rows * al * dtype_bytes)                      # adst block
+    if weighted:
+        vmem += block_rows * k * dtype_bytes
+    typed = logit_dim > 1 or carry
+    if typed:
+        vmem += heads * dtype_bytes                    # (1, H) prior row
+    if carry:
+        vmem += 2 * block_rows * dtype_bytes           # (BR, 1) m + l blocks
+    return {"smem_bytes": smem, "vmem_bytes": vmem,
+            "launch_rows": launch_rows, "block_feat": bf}
+
+
 def gat_launch_usage(rows: int, k: int, heads: int, feat: int, *,
                      block_rows: int = DEFAULT_BR,
                      block_feat: int = DEFAULT_BF,
                      dtype_bytes: int = 4,
                      weighted: bool = False) -> Dict[str, int]:
     """Static SMEM/VMEM bytes of one (chunked) flash-GAT launch."""
-    launch_rows = min(rows, ell_chunk_rows(k, block_rows))
-    bf = block_feat if feat % block_feat == 0 else feat
-    smem = launch_rows * k * _I32
-    vmem = (DOUBLE_BUFFER_SLOTS * block_rows * bf * dtype_bytes   # z gather
-            + DOUBLE_BUFFER_SLOTS * block_rows * heads * dtype_bytes  # alpha
-            + block_rows * bf * dtype_bytes                       # out block
-            + block_rows * heads * dtype_bytes)                   # adst block
-    if weighted:
-        vmem += block_rows * k * dtype_bytes
-    return {"smem_bytes": smem, "vmem_bytes": vmem,
-            "launch_rows": launch_rows, "block_feat": bf}
+    return attn_launch_usage(rows, k, heads, feat, logit_dim=1,
+                             block_rows=block_rows, block_feat=block_feat,
+                             dtype_bytes=dtype_bytes, weighted=weighted,
+                             carry=False)
 
 
 def gmm_launch_usage(k_dim: int, *, block: Tuple[int, int, int] = GMM_BLOCK,
@@ -153,16 +180,57 @@ def check_ell_layout(layout: Sequence[Tuple[np.ndarray, int]], *,
                 f"{VMEM_BYTES_PER_CORE}. Shrink block_feat or block_rows.")
 
 
+def check_attn_bucket(rows: int, k: int, heads: int, feat: int, *,
+                      logit_dim: int = 1,
+                      block_rows: int = DEFAULT_BR,
+                      weighted: bool = False,
+                      carry: bool = False) -> None:
+    """Validate one typed-attention bucket's grid against the budgets.
+
+    Covers the full typed launch shape — ``logit_dim``-wide alpha gathers,
+    the ``(1, heads)`` prior row, and the ``(m, l)`` carry output buffers —
+    so an unservable rung fails here (pack/trace time, host side), not when
+    a launch finally OOMs.
+    """
+    context = ("typed-attention bucket" if (logit_dim > 1 or carry)
+               else "flash-GAT bucket")
+    check_ell_rung(k, block_rows=block_rows, context=context)
+    usage = attn_launch_usage(rows, k, heads, feat, logit_dim=logit_dim,
+                              block_rows=block_rows, weighted=weighted,
+                              carry=carry)
+    if usage["vmem_bytes"] > VMEM_BYTES_PER_CORE:
+        raise BudgetError(
+            f"{context} (rows={rows}, K={k}, heads={heads}, feat={feat}, "
+            f"logit_dim={logit_dim}, carry={carry}): "
+            f"{usage['vmem_bytes']} VMEM bytes per launch exceeds the "
+            f"per-core budget of {VMEM_BYTES_PER_CORE}. Shrink the feature "
+            f"block, head count, or per-head logit width per launch.")
+
+
 def check_gat_bucket(rows: int, k: int, heads: int, feat: int, *,
                      block_rows: int = DEFAULT_BR,
                      weighted: bool = False) -> None:
     """Validate one flash-GAT bucket's grid against the budgets."""
-    check_ell_rung(k, block_rows=block_rows, context="flash-GAT bucket")
-    usage = gat_launch_usage(rows, k, heads, feat, block_rows=block_rows,
-                             weighted=weighted)
-    if usage["vmem_bytes"] > VMEM_BYTES_PER_CORE:
-        raise BudgetError(
-            f"flash-GAT bucket (rows={rows}, K={k}, heads={heads}, "
-            f"feat={feat}): {usage['vmem_bytes']} VMEM bytes per launch "
-            f"exceeds the per-core budget of {VMEM_BYTES_PER_CORE}. "
-            f"Shrink the feature block or head count per launch.")
+    check_attn_bucket(rows, k, heads, feat, logit_dim=1,
+                      block_rows=block_rows, weighted=weighted, carry=False)
+
+
+def check_attn_layout(layout: Sequence[Tuple[np.ndarray, int]], *,
+                      heads: int, feat: int, logit_dim: int,
+                      block_rows: int = DEFAULT_BR,
+                      weighted: bool = False,
+                      carry: bool = True,
+                      context: str = "typed-attention layout") -> None:
+    """Pack-time validation of a static bucket layout for typed attention.
+
+    Like :func:`check_ell_layout` but accounting the attention launch shape
+    (prior row + carry buffers) per rung, so a layout that would only die
+    inside an HGT launch is rejected when it is packed.
+    """
+    for rows, k in layout:
+        try:
+            check_attn_bucket(len(rows), int(k), heads, feat,
+                              logit_dim=logit_dim, block_rows=block_rows,
+                              weighted=weighted, carry=carry)
+        except BudgetError as exc:
+            raise BudgetError(f"{context}: {exc}") from None

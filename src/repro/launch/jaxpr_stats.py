@@ -138,6 +138,26 @@ def _gat_ell_cost(eqn):
     return flops, nbytes
 
 
+def _attn_ell_cost(eqn):
+    """Carry-mode typed-attention launch: outs = (acc (R,H*F), m, l (R,H))."""
+    ins, outs = _avals(eqn)
+    table = _ell_table(ins)
+    r, k = table.shape
+    acc, m = outs[0], outs[1]
+    heads = m.shape[1]
+    hf = acc.shape[-1]
+    # adst is the (R, H*LD) float operand row-aligned with the table
+    adst = next((a for a in ins
+                 if len(a.shape) == 2 and a.shape[0] == r and a.shape[1] != k
+                 and not np.issubdtype(a.dtype, np.integer)), None)
+    ld = (adst.shape[1] // max(heads, 1)) if adst is not None else 1
+    # per (row, slot): LD-wide dot per head + online softmax + accumulate
+    flops = r * k * (2 * heads * ld + 8 * heads + 2 * hf)
+    nbytes = (r * k * 4 + r * k * hf * acc.dtype.itemsize
+              + r * k * heads * ld * 4 + sum(_nbytes(o) for o in outs))
+    return flops, nbytes
+
+
 def _gmm_cost(eqn):
     ins, outs = _avals(eqn)
     x = next(a for a in ins if len(a.shape) == 2
@@ -173,6 +193,7 @@ def _flash_cost(eqn):
 _PALLAS_COSTS = {
     "_spmm_ell_kernel": _spmm_ell_cost,
     "_gat_ell_kernel": _gat_ell_cost,
+    "_attn_ell_kernel": _attn_ell_cost,
     "_gmm_kernel": _gmm_cost,
     "_segment_softmax_kernel": _segment_softmax_cost,
     "_flash_kernel": _flash_cost,

@@ -177,11 +177,21 @@ class GATConv(MessagePassing):
         else:
             a_src = (z_src * params["att_dst"]).sum(-1)
             a_dst = (z_dst * params["att_src"]).sum(-1)
+        # Explicit logit spec: GAT is the additive instance of the typed-
+        # attention stack (numerically identical to the implicit default —
+        # the additive non-carry path is byte-for-byte the pre-typed code).
+        # An explainer message_callback needs edge-level materialisation,
+        # which the typed entry point doesn't serve, so it keeps the
+        # implicit route.
+        from repro.kernels.attention.ops import AdditiveLogit
+        logit = (None if message_callback is not None
+                 else AdditiveLogit(self.negative_slope))
         res = self.propagate(params, edge_index, (z_src, z_dst),
                              alpha=(a_src, a_dst), edge_mask=edge_mask,
                              edge_weight=edge_weight, num_nodes=num_nodes,
                              message_callback=message_callback,
                              negative_slope=self.negative_slope,
+                             logit=logit,
                              return_attention=return_attention)
         out, alpha = res if return_attention else (res, None)
         n = out.shape[0]

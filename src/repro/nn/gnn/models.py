@@ -102,3 +102,17 @@ def make_model(name: str, in_features: int, hidden: int, out_features: int,
         return BasicGNN("gat", in_features, hidden, out_features, num_layers,
                         heads=4)
     return BasicGNN(name, in_features, hidden, out_features, num_layers)
+
+
+def make_hgt(metadata, in_features: int, hidden: int, out_features: int,
+             num_layers: int, heads: int = 2):
+    """HGT graph-transformer stack with the BasicGNN dims convention.
+
+    Each layer is an ``HGTConv`` (typed dot-product attention with a
+    cross-relation merged softmax, carried by the same fused kernel as
+    GAT); the stack shares one packed per-relation ELL layout across
+    layers via the hetero trimming path.
+    """
+    from repro.core.hetero import hgt
+    dims = [in_features] + [hidden] * (num_layers - 1) + [out_features]
+    return hgt(metadata, dims, heads=heads)

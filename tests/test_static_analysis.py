@@ -49,6 +49,28 @@ def test_lint_flags_raw_kernel_entry_outside_package():
     assert not lint_source("src/repro/kernels/spmm/ops.py", src)
 
 
+def test_lint_flags_registered_attn_entry_outside_package():
+    """`attn_ell_pallas` joined the registered raw-entry table (PR 9)."""
+    src = "def f(t, z, a, b):\n    return attn_ell_pallas(t, z, a, b)\n"
+    bad = lint_source("src/repro/core/edge_index.py", src)
+    assert [f.rule for f in bad] == ["raw-kernel-entry"]
+    assert not lint_source("src/repro/kernels/attention/ops.py", src)
+
+
+def test_lint_flags_unregistered_pallas_entry_outside_package():
+    """Any `*_pallas` call outside repro/kernels/ is package-private —
+    even ones the registry has never heard of (generic rule, PR 9)."""
+    src = "def f(t, x):\n    return frobnicate_ell_pallas(t, x)\n"
+    bad = lint_source("src/repro/nn/gnn/conv.py", src)
+    assert [f.rule for f in bad] == ["raw-kernel-entry"]
+    # inside the kernel package: the wrapper's job, clean
+    assert not lint_source("src/repro/kernels/attention/ops.py", src)
+    # dispatch-control kwargs are not kernel entries: allowlisted
+    ok = ("def f(t, x, force_pallas=None):\n"
+          "    return g(t, x, use_pallas(force_pallas))\n")
+    assert not lint_source("src/repro/nn/gnn/conv.py", ok)
+
+
 def test_lint_flags_clock_and_rng_in_resilience():
     src = ("import time\nimport random\nimport numpy as np\n"
            "def jitter():\n"
@@ -139,6 +161,34 @@ def test_ell_layout_report_and_headroom(rng):
     summary = budget_headroom_summary([layout], feat=64)
     assert summary["min_smem_headroom_bytes"] > 0
     assert summary["launches_audited"] >= len(layout) + 2
+
+
+def test_typed_attention_budget_accounting():
+    """The typed carry launch ships more SMEM than GAT's: `(1, H)` prior
+    row plus two `BR x d`-per-head m/l carry blocks, and head-dim-wide
+    logit halves instead of scalar ones. A shape the GAT checker accepts
+    must therefore be rejectable by the typed checker."""
+    shape = dict(rows=8, k=4, heads=4, feat=16)
+    # GAT accounting (logit_dim=1, no carry) passes at this shape...
+    hw.check_gat_bucket(**shape)
+    # ...and the typed checker agrees when given the same launch shape
+    hw.check_attn_bucket(**shape, logit_dim=1, carry=False)
+    usage_gat = hw.gat_launch_usage(8, 4, 4, 16)
+    usage_typed = hw.attn_launch_usage(8, 4, 4, 16, logit_dim=1,
+                                       carry=False)
+    assert usage_gat == usage_typed
+    # ...but wide typed logit halves blow the VMEM budget
+    with pytest.raises(BudgetError, match="attention"):
+        hw.check_attn_bucket(**shape, logit_dim=50000, carry=True)
+
+
+def test_attn_grid_report_servable_shape():
+    from repro.analysis import attn_grid_report
+
+    rec = attn_grid_report(64, 8, 4, 32, logit_dim=8, carry=True)
+    assert rec["logit_dim"] == 8 and rec["carry"]
+    assert rec["vmem_headroom_bytes"] > 0
+    assert rec["smem_headroom_bytes"] > 0
 
 
 # --------------------------------------------------- dispatch golden audits
@@ -319,6 +369,54 @@ def test_golden_audit_hetero_step(rng, monkeypatch):
     assert sentinel.count("hetero_step") == 1
 
 
+def test_golden_audit_hgt_step(rng, monkeypatch):
+    """The hgt_step cell: one grouped K/Q/V matmul (`_gmm_kernel`) plus
+    typed carry-mode attention (`_attn_ell_kernel`), zero fallbacks."""
+    from repro.core.hetero import hgt
+    from repro.data.data import HeteroData
+    from repro.data.hetero_sampler import HeteroNeighborLoader
+
+    monkeypatch.setenv("REPRO_USE_PALLAS", "1")
+    n_user, n_item, e, feat = 128, 256, 1024, 16
+    fan = {("user", "buys", "item"): [4, 2],
+           ("item", "rev_buys", "user"): [4, 2]}
+    hd = HeteroData()
+    hd.add_nodes("user", rng.standard_normal((n_user, feat)).astype(
+        np.float32))
+    hd.add_nodes("item", rng.standard_normal((n_item, feat)).astype(
+        np.float32))
+    ub = np.stack([rng.integers(0, n_user, e), rng.integers(0, n_item, e)])
+    hd.add_edges(("user", "buys", "item"), ub)
+    hd.add_edges(("item", "rev_buys", "user"), ub[::-1])
+    loader = HeteroNeighborLoader(
+        hd, hd, num_neighbors=fan, input_type="item",
+        input_nodes=np.arange(n_item), batch_size=8, prefill_ell=True,
+        seed=0)
+    it = iter(loader)
+    batches = [next(it) for _ in range(2)]
+    net = hgt((["user", "item"], list(fan)), [feat, 8, 8], heads=4)
+    params = net.init(jax.random.PRNGKey(0))
+
+    def step(p, batch):
+        def loss_fn(p):
+            out = net.apply(p, batch.x_dict, batch.edge_index_dict,
+                            batch.num_nodes_dict)
+            return (batch.seed_output(out) ** 2).mean()
+
+        return jax.value_and_grad(loss_fn)(p)
+
+    report = audit_report(step, params, batches[0])
+    report.assert_fused(expect_kernels=("_attn_ell_kernel", "_gmm_kernel"))
+    assert report.oracle_fallbacks == 0
+    # the typed-attention custom VJP is attributed, not misread as oracle
+    assert report.kernel_vjp_eqns.get("attn_ell", 0) > 0
+    sentinel = RetraceSentinel(budget=1)
+    probe = sentinel.wrap(lambda p, b: None, name="hgt_step")
+    for b in batches:
+        probe(params, b)
+    assert sentinel.count("hgt_step") == 1
+
+
 def test_audit_flags_oracle_path(rng):
     """The auditor must *reject* the XLA oracle branch (negative control)."""
     batch = _loader_batches(rng, count=1)[0]
@@ -347,7 +445,7 @@ def test_bench_fastpath_audit_cell(tmp_path):
     assert len(rec) == 1
     audits = rec[0]["audits"]
     assert set(audits) == {"loader_step", "train_step", "hetero_step",
-                           "gat_step"}
+                           "gat_step", "hgt_step"}
     for name, a in audits.items():
         assert a["oracle_fallbacks"] == 0, (name, a)
         assert a["trace_count"] == 1, (name, a)
