@@ -13,9 +13,10 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (chaos_recovery, explainer_fidelity,
-                            fastpath_audit, grouped_matmul_bench,
-                            sampler_throughput, spmm_bench, store_scaling,
+    from benchmarks import (chaos_recovery, dist_scaling,
+                            explainer_fidelity, fastpath_audit,
+                            grouped_matmul_bench, sampler_throughput,
+                            spmm_bench, store_scaling,
                             table12_compile_trim)
 
     suites = [
@@ -29,6 +30,7 @@ def main() -> None:
         ("spmm_hetero_step", spmm_bench.run_hetero_step),
         ("spmm_gat_step", spmm_bench.run_gat_step),
         ("spmm_hgt_step", spmm_bench.run_hgt_step),
+        ("dist_scaling", dist_scaling.run),
         ("fastpath_audit", fastpath_audit.run),
         ("explainer_fidelity", explainer_fidelity.run),
         ("chaos_recovery", chaos_recovery.run),

@@ -36,6 +36,12 @@ KERNEL_VJP_SCOPE = "repro_kernel_vjp:"
 _GATHER_SCATTER = ("gather", "scatter", "scatter-add", "scatter_add",
                    "scatter-max", "scatter-min", "take", "segment_sum")
 
+# Cross-device collectives (the shard_map data-parallel step's comm layer).
+# Classified *before* any scope check: a psum is communication wherever it
+# appears — it must never be mistaken for an oracle fallback.
+_COLLECTIVES = ("psum", "all_gather", "all_to_all", "ppermute",
+                "reduce_scatter", "pmax", "pmin", "axis_index")
+
 
 def _scope_tag(name_stack: str, marker: str) -> str:
     """Extract ``<tag>`` from the first ``<marker><tag>`` scope in a stack.
@@ -77,6 +83,7 @@ class DispatchReport:
     kernel_vjp_eqns: Dict[str, int] = dataclasses.field(default_factory=dict)
     unattributed_gather_scatter: Dict[str, int] = dataclasses.field(
         default_factory=dict)
+    collective_eqns: Dict[str, int] = dataclasses.field(default_factory=dict)
     total_eqns: int = 0
     dynamic_trip_warnings: int = 0
 
@@ -89,13 +96,24 @@ class DispatchReport:
     def total_kernel_launches(self) -> int:
         return sum(self.kernel_launches.values())
 
+    @property
+    def total_collectives(self) -> int:
+        """Total cross-device collective eqns (psum/all_gather/...)."""
+        return sum(self.collective_eqns.values())
+
     def assert_fused(self, *, expect_kernels: Tuple[str, ...] = (),
-                     min_launches: int = 1) -> "DispatchReport":
+                     min_launches: int = 1,
+                     expect_collectives: Dict[str, int] = None
+                     ) -> "DispatchReport":
         """Fail unless the step is fully on the fast path.
 
         Asserts zero oracle-region eqns, at least ``min_launches``
         ``pallas_call`` eqns overall, and (when given) at least one launch
-        of each kernel in ``expect_kernels``. Returns self for chaining.
+        of each kernel in ``expect_kernels``. ``expect_collectives`` pins
+        the *exact* per-primitive collective counts (golden audit of a
+        sharded step: e.g. ``{"psum": 1}`` for the single fused gradient
+        all-reduce; primitives absent from the dict must not appear).
+        Returns self for chaining.
         """
         if self.oracle_fallbacks:
             raise AssertionError(
@@ -110,6 +128,11 @@ class DispatchReport:
                 raise AssertionError(
                     f"expected kernel {k!r} was never launched; saw "
                     f"{self.kernel_launches}")
+        if expect_collectives is not None and \
+                dict(self.collective_eqns) != dict(expect_collectives):
+            raise AssertionError(
+                f"collective eqns {dict(self.collective_eqns)} != expected "
+                f"{dict(expect_collectives)}")
         return self
 
     def summary(self) -> Dict[str, Any]:
@@ -121,6 +144,8 @@ class DispatchReport:
             "kernel_vjp_eqns": dict(self.kernel_vjp_eqns),
             "unattributed_gather_scatter":
                 dict(self.unattributed_gather_scatter),
+            "collective_eqns": dict(self.collective_eqns),
+            "total_collectives": self.total_collectives,
             "total_eqns": self.total_eqns,
         }
 
@@ -139,6 +164,11 @@ def audit_jaxpr(jaxpr, mult: int = 1,
                 "name", "<unnamed>")
             report.kernel_launches[kernel] = report.kernel_launches.get(
                 kernel, 0) + mult
+            report.total_eqns += mult
+            continue
+        if name in _COLLECTIVES:
+            report.collective_eqns[name] = report.collective_eqns.get(
+                name, 0) + mult
             report.total_eqns += mult
             continue
         subs, is_while = _sub_jaxprs(eqn)

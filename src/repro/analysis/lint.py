@@ -1,6 +1,6 @@
 """AST lint rules for the Pallas GNN stack (+ pytree round-trip check).
 
-Four rules, each encoding an invariant the stack's correctness rests on:
+Five rules, each encoding an invariant the stack's correctness rests on:
 
   * **raw-kernel-entry** — the forward-only Pallas entry points
     (``spmm_ell_pallas``, ``gat_ell_pallas``, ``attn_ell_pallas``,
@@ -26,6 +26,13 @@ Four rules, each encoding an invariant the stack's correctness rests on:
     must be pure numpy: a ``jnp.``/``jax.`` call there moves device work
     (and possibly tracing) onto the loader's producer/stage threads —
     only ``_stage_pack`` may touch jnp, on purpose.
+  * **shard-step-purity** — the ``shard_map``'d train-step bodies
+    (``MeshTrainer``'s ``_shard_body``/``_shard_body_compressed``) must
+    stay on-device end to end: no ``jax.device_get`` and no host
+    callbacks (``pure_callback``/``io_callback``/``debug_callback``/
+    ``print``-style debugging). A host round-trip inside the sharded body
+    serialises every device on the mesh behind one host transfer — the
+    exact sync point data parallelism exists to remove.
   * **pytree-roundtrip** (dynamic, not AST) — every registered pytree
     (``Batch``, ``HeteroBatch``, ``EdgeIndex``) must flatten/unflatten to
     an equal treedef with its aux fields intact, else batches silently
@@ -71,7 +78,8 @@ HOST_PACKING_FUNCS: Dict[str, Set[str]] = {
     "repro/data/hetero_sampler.py": {
         "hetero_static_slot_bounds", "_stage_sample", "_stage_gather"},
     "repro/data/loader.py": {
-        "_stage_sample", "_stage_gather", "_seed_batches", "_seed_route"},
+        "_stage_sample", "_stage_gather", "_seed_batches", "_seed_route",
+        "split_seed_shards", "_sample_one", "_gather_one"},
     "repro/data/feature_store.py": {"lookup", "insert", "_evict", "_get"},
     "repro/data/partition.py": {
         "partition_graph", "_frontier_neighbors", "_undirected_csr"},
@@ -89,6 +97,16 @@ DETERMINISTIC_HOST_SUFFIXES: Tuple[str, ...] = (
 
 # backward-compat alias (pre-pipeline rule scope)
 RESILIENCE_SUFFIX = DETERMINISTIC_HOST_SUFFIXES[0]
+
+# path suffix -> shard_map'd step-body function names that must stay
+# on-device (no host transfers / callbacks inside the mesh step).
+SHARD_STEP_FUNCS: Dict[str, Set[str]] = {
+    "repro/launch/train.py": {"_shard_body", "_shard_body_compressed"},
+}
+
+# Call names (matched on the final attribute) that force a host round-trip.
+_HOST_SYNC_CALLS = {"device_get", "pure_callback", "io_callback",
+                    "debug_callback", "debug_print"}
 
 # numpy global-state RNG entry points (the seeded-Generator API is fine).
 _NP_GLOBAL_RNG = {"seed", "random", "rand", "randn", "randint", "choice",
@@ -224,6 +242,34 @@ def _lint_host_packing(path: str, tree: ast.AST) -> List[Finding]:
     return findings
 
 
+def _lint_shard_step_purity(path: str, tree: ast.AST) -> List[Finding]:
+    posix = _posix(path)
+    func_names: Optional[Set[str]] = None
+    for suffix, names in SHARD_STEP_FUNCS.items():
+        if posix.endswith(suffix):
+            func_names = names
+            break
+    if func_names is None:
+        return []
+    findings = []
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if node.name not in func_names:
+            continue
+        for sub in ast.walk(node):
+            if not isinstance(sub, ast.Call):
+                continue
+            name = _call_name(sub)
+            if name in _HOST_SYNC_CALLS:
+                findings.append(Finding(
+                    path, sub.lineno, "shard-step-purity",
+                    f"{node.name} is a shard_map'd step body and must stay "
+                    f"on-device; {name} forces a host round-trip that "
+                    f"serialises the whole mesh"))
+    return findings
+
+
 def lint_source(path: str, source: str) -> List[Finding]:
     """All AST rules over one file's source text."""
     try:
@@ -232,7 +278,8 @@ def lint_source(path: str, source: str) -> List[Finding]:
         return [Finding(path, e.lineno or 0, "parse-error", str(e))]
     return (_lint_raw_kernel_entries(path, tree)
             + _lint_resilience_clock_rng(path, tree)
-            + _lint_host_packing(path, tree))
+            + _lint_host_packing(path, tree)
+            + _lint_shard_step_purity(path, tree))
 
 
 def lint_tree(root: str) -> List[Finding]:

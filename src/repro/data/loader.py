@@ -79,6 +79,15 @@ class Batch:
     def num_nodes(self) -> int:
         return int(self.x.shape[0])
 
+    @property
+    def seed_mask(self) -> jnp.ndarray:
+        """(B,) True for real seeds, False for -1 shard-padding seeds.
+
+        Per-shard batches only (inside a shard_map body, or shards=1): a
+        stacked multi-shard batch must be sliced to one shard first.
+        """
+        return self.n_id[self.seed_slots] >= 0
+
     def seed_output(self, out: jnp.ndarray) -> jnp.ndarray:
         return out[self.seed_slots]
 
@@ -102,6 +111,45 @@ def _batch_unflatten(aux, children):
 # Batch flows through jit boundaries whole (the per-hop counts are static
 # aux data); identical budgets -> identical treedef -> no recompiles.
 jax.tree_util.register_pytree_node(Batch, _batch_flatten, _batch_unflatten)
+
+
+def split_seed_shards(seeds: np.ndarray,
+                      seed_time: Optional[np.ndarray],
+                      shards: int):
+    """Split one global seed batch into ``shards`` equal-size parts.
+
+    Pure numpy (producer-thread stage). When the batch doesn't divide, the
+    tail pads with -1 seeds (seed time 0) up to ``ceil(B/shards)`` per shard
+    — the masked-seed convention the sampler keeps out of its dedup table
+    and ``Batch.seed_mask`` exposes to the loss. Returns a list of
+    ``(seeds, seed_time)`` pairs, one per shard.
+    """
+    shards = int(shards)
+    if shards < 1:
+        raise ValueError(f"shards must be >= 1, got {shards}")
+    seeds = np.asarray(seeds, np.int64)
+    per = -(-len(seeds) // shards)
+    pad = per * shards - len(seeds)
+    if pad:
+        seeds = np.concatenate([seeds, np.full(pad, -1, seeds.dtype)])
+        if seed_time is not None:
+            seed_time = np.concatenate(
+                [seed_time, np.zeros(pad, seed_time.dtype)])
+    return [(seeds[i * per:(i + 1) * per],
+             None if seed_time is None
+             else seed_time[i * per:(i + 1) * per])
+            for i in range(shards)]
+
+
+def stack_batches(batches: List[Batch]) -> Batch:
+    """Stack per-shard batches leaf-wise into one leading-``D``-axis pytree.
+
+    The stacked batch is what the mesh trainer shards over the ``data``
+    axis: every leaf gains a leading shard dimension, the static aux data
+    (per-hop counts) is shared. Requires identical treedefs — i.e. equal
+    per-shard seed counts, which ``split_seed_shards`` guarantees.
+    """
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *batches)
 
 
 _SKIP = object()  # sentinel: a batch dropped by on_batch_error="skip"
@@ -434,8 +482,11 @@ class NeighborLoader(_PrefetchLoader):
                  partition_order: bool = False,
                  prefill_ell: Optional[bool] = None,
                  on_batch_error: str = "raise", batch_retries: int = 2,
-                 seed: int = 0):
+                 shards: int = 1, seed: int = 0):
         self.fs = feature_store
+        self.shards = int(shards)
+        if self.shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
         self._init_policy(on_batch_error, batch_retries)
         self._init_pipeline(pipeline_depth, partition_order)
         self.sampler = NeighborSampler(
@@ -467,10 +518,35 @@ class NeighborLoader(_PrefetchLoader):
         return self._ell_layouts[num_seeds]
 
     # ---- stages ----
+    # With shards > 1 each stage runs its single-shard body once per shard
+    # (sampling stays in shard order for deterministic RNG draws) and
+    # ``_stage_pack`` stacks the per-shard batches leaf-wise; health
+    # counters keep counting *global* batches either way.
     def _stage_sample(self, seeds: np.ndarray,
                       seed_time: Optional[np.ndarray]):
         """Sequential: sampler RNG draws + the (cached) shared ELL layout
         decision both happen in batch order on one thread."""
+        if self.shards == 1:
+            return self._sample_one(seeds, seed_time)
+        return {"parts": [self._sample_one(s, t) for s, t in
+                          split_seed_shards(seeds, seed_time, self.shards)]}
+
+    def _stage_gather(self, sample):
+        """Feature (+ label) fetch — the latency this pipeline hides."""
+        if "parts" not in sample:
+            return self._gather_one(sample)
+        return {"parts": [self._gather_one(p) for p in sample["parts"]]}
+
+    def _stage_pack(self, sample, gather) -> Batch:
+        """Host ELL/CSR packing + device put -> the jit-ready batch."""
+        if "parts" not in sample:
+            return self._pack_one(sample, gather)
+        return stack_batches([
+            self._pack_one(s, g)
+            for s, g in zip(sample["parts"], gather["parts"])])
+
+    def _sample_one(self, seeds: np.ndarray,
+                    seed_time: Optional[np.ndarray]):
         out: SamplerOutput = self.sampler.sample(seeds, seed_time)
         fill_ell = (use_pallas() if self.prefill_ell is None
                     else self.prefill_ell)
@@ -478,8 +554,7 @@ class NeighborLoader(_PrefetchLoader):
         return {"seeds": seeds, "out": out, "layout": layout,
                 "fill_ell": fill_ell}
 
-    def _stage_gather(self, sample):
-        """Feature (+ label) fetch — the latency this pipeline hides."""
+    def _gather_one(self, sample):
         out: SamplerOutput = sample["out"]
         fetch = getattr(self.fs, "get_padded_resilient", None)
         degraded = None
@@ -489,16 +564,23 @@ class NeighborLoader(_PrefetchLoader):
             x = self.fs.get_padded(out.node, group="node", attr="x")
         y = None
         if self.labels_attr is not None:
+            seeds = np.asarray(sample["seeds"])
+            # -1 shard-padding seeds must not wrap to the last row: gather
+            # through a safe index, then zero the padded label rows.
+            safe = np.where(seeds >= 0, seeds, 0)
             try:
                 y = self.fs.get_tensor(
-                    group="node", attr=self.labels_attr,
-                    index=sample["seeds"])
+                    group="node", attr=self.labels_attr, index=safe)
             except KeyError:
                 y = None
+            if y is not None and (seeds < 0).any():
+                y = np.asarray(y)
+                mask = (seeds >= 0).reshape(
+                    (-1,) + (1,) * (y.ndim - 1))
+                y = np.where(mask, y, np.zeros((), y.dtype))
         return {"x": x, "y": y, "degraded": degraded}
 
-    def _stage_pack(self, sample, gather) -> Batch:
-        """Host ELL/CSR packing + device put -> the jit-ready batch."""
+    def _pack_one(self, sample, gather) -> Batch:
         out: SamplerOutput = sample["out"]
         n_slots = len(out.node)
         ei = EdgeIndex.from_coo_prefilled(

@@ -166,14 +166,22 @@ class NeighborSampler:
         Dedup uses a persistent global->slot lookup array (reset via the
         touched list after each call) — the vectorised replacement for the
         paper's C++ hash map.
+
+        Seeds may contain -1 pads (the loader's shard tail padding): a -1
+        seed keeps its slot in ``[1, 1+B)`` so the batch layout stays
+        static, but never enters the slot lookup and never expands — a
+        plain ``slot_of[seeds] = ...`` would alias ``slot_of[-1]`` onto the
+        last global node and corrupt dedup.
         """
         b = len(seeds)
         n_glob = self.csr.num_rows
         if not hasattr(self, "_slot_of") or len(self._slot_of) != n_glob:
             self._slot_of = np.full(n_glob, -1, np.int64)
         slot_of = self._slot_of
-        touched = [seeds]
-        slot_of[seeds] = np.arange(1, b + 1)
+        valid_seed = seeds >= 0
+        vseeds = seeds[valid_seed]
+        touched = [vseeds]
+        slot_of[vseeds] = np.arange(1, b + 1)[valid_seed]
         nodes = [np.array([-1], np.int64), seeds]  # null sink + seeds
         num_nodes = [1 + b]
         rows, cols, eids, num_edges = [], [], [], []

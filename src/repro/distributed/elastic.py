@@ -75,6 +75,29 @@ def reshard_state(state, new_shardings):
         lambda a, s: jax.device_put(np.asarray(a), s), state, new_shardings)
 
 
+def elastic_resize(ckpt_dir, abstract_state, mesh, *,
+                   step: Optional[int] = None):
+    """Restore a replicated train state onto a differently-sized mesh.
+
+    The N->M data-parallel resize half of PR 10: params/optimizer state are
+    replicated (spec ``P()``) on every mesh, so a checkpoint written on an
+    N-device mesh restores *bit-identical* onto an M-device one — only the
+    replica count changes. Per-device compressor residuals are NOT part of
+    the checkpointed state; callers restart error feedback from zeros after
+    a resize (``MeshTrainer.restore`` does). Returns ``(state, step)``.
+    """
+    from repro.distributed import checkpoint as ckpt
+    from repro.distributed.sharding import replicated_shardings
+    if step is None:
+        step = ckpt.latest_step(ckpt_dir)
+        if step is None:
+            raise RuntimeError(f"no checkpoint to resize from in {ckpt_dir}")
+    shardings = replicated_shardings(mesh, abstract_state)
+    state = ckpt.restore_checkpoint(ckpt_dir, step, abstract_state,
+                                    mesh=mesh, shardings=shardings)
+    return state, step
+
+
 class ElasticController:
     """Orchestrates evict -> shrink mesh -> restore -> continue."""
 

@@ -363,6 +363,31 @@ def constrain(x, kind: str):
         x, NamedSharding(mesh, spec))
 
 
+# ----------------------------------------------- data-parallel GNN (PR 10)
+# The mesh train step's scheme is deliberately simpler than the LM rules
+# above: every model/optimizer leaf replicates (P()), every batch leaf
+# shards its leading shard axis over the 1-D "data" mesh. The loader's
+# ``stack_batches`` produces exactly that leading axis.
+
+def replicated_shardings(mesh: Mesh, tree: Any) -> Any:
+    """NamedSharding(P()) for every leaf — params/opt state on a data mesh."""
+    return jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, P()), tree)
+
+
+def data_batch_spec(leaf, axis_name: str = "data") -> P:
+    """Leading-axis shard spec for one stacked-batch leaf."""
+    return P(axis_name, *([None] * (jnp.ndim(leaf) - 1)))
+
+
+def data_batch_shardings(mesh: Mesh, batch: Any,
+                         axis_name: str = "data") -> Any:
+    """Shard every stacked-batch leaf's leading shard axis over the mesh."""
+    return jax.tree_util.tree_map(
+        lambda leaf: NamedSharding(mesh, data_batch_spec(leaf, axis_name)),
+        batch)
+
+
 # ------------------------------------------------------------- train state
 def state_shardings(mesh: Mesh, state_shape, profile: str = "2d") -> Any:
     """TrainState sharding: params/mu/nu share param specs; step replicated."""

@@ -26,7 +26,23 @@ from jax import core
 
 FLOP_REPORT_KEYS = ("dot_flops", "conv_flops", "elementwise_flops",
                     "pallas_flops", "total_flops", "major_bytes",
-                    "while_warning")
+                    "collective_bytes", "while_warning")
+
+# Cross-device collectives: per-device wire-traffic model (ring/bidirectional
+# approximations — what the compressed-vs-raw all-reduce comparison needs,
+# not a topology simulator). psum moves ~2x its operand bytes on a ring;
+# all_gather receives (out - in) bytes; reduce_scatter/all_to_all/ppermute
+# move their operand bytes once.
+_COLLECTIVE_BYTES = {
+    "psum": lambda inb, outb: 2 * inb,
+    "all_gather": lambda inb, outb: max(outb - inb, 0),
+    "reduce_scatter": lambda inb, outb: inb,
+    "all_to_all": lambda inb, outb: inb,
+    "ppermute": lambda inb, outb: inb,
+    "axis_index": lambda inb, outb: 0,
+    "pmax": lambda inb, outb: 2 * inb,
+    "pmin": lambda inb, outb: 2 * inb,
+}
 
 
 def _nbytes(aval) -> int:
@@ -228,6 +244,14 @@ def analyze_jaxpr(jaxpr, mult: int = 1, acc: Dict[str, float] = None
             acc["pallas_flops"] += mult * f
             acc["total_flops"] += mult * f
             acc["major_bytes"] += mult * nb
+            continue
+        if name in _COLLECTIVE_BYTES:
+            inb = sum(_nbytes(v.aval) for v in eqn.invars
+                      if hasattr(v.aval, "shape"))
+            outb = sum(_nbytes(v.aval) for v in eqn.outvars
+                       if hasattr(v.aval, "shape"))
+            acc["collective_bytes"] += mult * _COLLECTIVE_BYTES[name](
+                inb, outb)
             continue
         subs, is_while = _sub_jaxprs(eqn)
         if subs:

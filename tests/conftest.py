@@ -1,8 +1,19 @@
 import os
 
-# Tests run on the single real CPU device (the dry-run, and only the
-# dry-run, forces 512 host devices — per its own module header).
+# Tests run on the CPU backend (the dry-run, and only the dry-run, forces
+# 512 host devices — per its own module header).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# The data-parallel mesh tests (tests/test_mesh_scaleout.py) need several
+# host devices; the flag must be in place before jax initialises its
+# backends, i.e. before the first jax import anywhere in the suite. Eight
+# covers every mesh size the tests build (1/2/4/8). A pre-existing
+# force-count in the environment wins.
+from repro.launch.mesh import HOST_DEVICE_FLAG, host_device_flag  # noqa: E402
+
+_flags = os.environ.get("XLA_FLAGS", "")
+if HOST_DEVICE_FLAG not in _flags:
+    os.environ["XLA_FLAGS"] = f"{_flags} {host_device_flag(8)}".strip()
 
 import numpy as np
 import pytest

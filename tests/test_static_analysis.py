@@ -118,6 +118,40 @@ def test_lint_flags_jnp_in_host_packing():
     assert not lint_source("src/repro/kernels/spmm/ops.py", ok)
 
 
+def test_lint_flags_host_sync_in_shard_step_body():
+    """PR 10: the shard_map'd step bodies must stay on-device — a
+    device_get or host callback inside them serialises the mesh."""
+    src = ("def _shard_body(state, stacked):\n"
+           "    g = jax.device_get(state.params)\n"
+           "    return g\n")
+    bad = lint_source("src/repro/launch/train.py", src)
+    assert [f.rule for f in bad] == ["shard-step-purity"]
+    cb = ("def _shard_body_compressed(state, stacked, residual):\n"
+          "    jax.debug.debug_print('loss={l}', l=state.step)\n"
+          "    return jax.pure_callback(f, shape, state)\n")
+    rules = [f.rule for f in lint_source("src/repro/launch/train.py", cb)]
+    assert rules == ["shard-step-purity"] * 2
+
+
+def test_lint_shard_step_rule_scoped_to_step_bodies():
+    # other functions in train.py may device_get freely (host-side driver)
+    src = ("def step(self, state, batch):\n"
+           "    return jax.device_get(self._step(state, batch))\n")
+    assert not lint_source("src/repro/launch/train.py", src)
+    # identical body outside train.py is out of scope
+    bad = ("def _shard_body(state, stacked):\n"
+           "    return jax.device_get(state)\n")
+    assert not lint_source("src/repro/train/loop.py", bad)
+
+
+def test_lint_real_mesh_step_bodies_clean():
+    with open(os.path.join(REPO_ROOT, "src", "repro", "launch",
+                           "train.py")) as f:
+        src = f.read()
+    assert not [f_ for f_ in lint_source("src/repro/launch/train.py", src)
+                if f_.rule == "shard-step-purity"]
+
+
 def test_pytree_roundtrips_clean():
     assert lint_mod.check_pytree_roundtrips() == []
 
